@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: interpret-mode correctness timing is meaningless
+for TPU perf, so we report (a) oracle wall-time on CPU as a sanity number
+and (b) the analytic VMEM working set + arithmetic intensity per kernel
+block, which is what the TPU schedule is designed around."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel, make_env
+from repro.kernels import ops, ref
+from benchmarks.paper_common import emit
+
+
+def _time(f, *args, n=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    # flash attention: block VMEM working set
+    bq = bk = 128
+    hd = 128
+    vmem = (bq * hd + 2 * bk * hd) * 2 + (bq * hd + 2 * bq) * 4 + bq * bk * 4
+    rows.append(("flash_attention:vmem_block_bytes", float(vmem),
+                 f"bq={bq},bk={bk},hd={hd}: fits 16MB VMEM"))
+    rows.append(("flash_attention:arith_intensity",
+                 (2 * bq * bk * hd * 2) / float(vmem),
+                 "FLOPs/byte per block >> 0.24 (v5e ridge) -> MXU-bound"))
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64), jnp.bfloat16)
+    us = _time(lambda a, b, c: ops.flash_attention(a, b, c, interpret=True,
+                                                   block_q=64, block_k=64),
+               q, k, v, n=2)
+    rows.append(("flash_attention:interpret_us", us, "CPU interpret (sanity)"))
+
+    # rg_lru
+    la = -jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4, 512, 128)))
+    b = jax.random.normal(jax.random.PRNGKey(4), (4, 512, 128))
+    us = _time(lambda x, y: ops.rg_lru(x, y, interpret=True), la, b, n=2)
+    rows.append(("rg_lru:interpret_us", us, "CPU interpret (sanity)"))
+    rows.append(("rg_lru:vmem_block_bytes",
+                 float((8 * 256 * 128 * 2 + 8 * 128) * 4),
+                 "(bb,bs,bw)=(8,256,128) fp32 in+out+carry"))
+
+    # noma rates at paper-relevant tile
+    env = make_env(jax.random.PRNGKey(5), 16, 4, 8)
+    beta = jnp.ones((16, 8)) / 8
+    p = jnp.full((16,), 0.2)
+    us = _time(lambda e, bb, pp: ops.noma_uplink_rates(e, bb, pp,
+                                                       interpret=True),
+               env, beta, p, n=2)
+    rows.append(("noma_rates:interpret_us", us, "CPU interpret (sanity)"))
+    rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
+                 1250 * 1250 * 250 * 4 / 1e9,
+                 "naive (U,V,M) fp32 the kernel avoids materializing"))
+    emit("kernel_bench", rows)
+
+
+if __name__ == "__main__":
+    run()

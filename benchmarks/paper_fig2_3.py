@@ -1,0 +1,31 @@
+"""Fig.2 / Fig.3: latency speedup and energy-consumption reduction of
+ECC-NOMA / ECC(-OMA) / Edge-Only vs the Device-Only baseline, for the three
+chain DNNs (NiN, YOLOv2, VGG16). Normalization = Device-Only (paper Sec VI.B).
+"""
+import time
+
+from repro.core import profiles
+from benchmarks.paper_common import emit, mean_outcomes
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    for pname, fn in profiles.PAPER_MODELS.items():
+        prof = fn()
+        acc = mean_outcomes(12, 3, 4, prof)
+        dev_T, dev_E = acc["device_only"]["T"], acc["device_only"]["E"]
+        for m in ("ecc_noma", "ecc_oma", "edge_only"):
+            rows.append((f"{pname}:{m}:latency_speedup",
+                         dev_T / acc[m]["T"],
+                         "paper band: ECC 3.1-8x, ECC-NOMA > ECC"))
+            rows.append((f"{pname}:{m}:energy_reduction",
+                         dev_E / acc[m]["E"],
+                         "paper band: ECC 0.85-0.97x"))
+    us = (time.time() - t0) * 1e6 / max(1, len(rows))
+    emit("fig2_3", [(r[0], r[1], r[2]) for r in rows])
+    print(f"fig2_3,us_per_point,{us:.0f},wall-clock")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig.4 / Fig.5: ECC vs Neurosurgeon and DNN-Surgery, normalized to
+Neurosurgeon (paper Sec VI.B second comparison)."""
+import time
+
+from repro.core import profiles
+from benchmarks.paper_common import emit, mean_outcomes
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    for pname, fn in profiles.PAPER_MODELS.items():
+        prof = fn()
+        acc = mean_outcomes(12, 3, 4, prof)
+        ns_T, ns_E = acc["neurosurgeon"]["T"], acc["neurosurgeon"]["E"]
+        for m in ("ecc_noma", "ecc_oma", "dnn_surgery"):
+            rows.append((f"{pname}:{m}:latency_vs_neurosurgeon",
+                         ns_T / acc[m]["T"],
+                         "paper: ECC ~ DNN-surgery <~ 1, ECC-NOMA > 1"))
+            rows.append((f"{pname}:{m}:energy_vs_neurosurgeon",
+                         ns_E / acc[m]["E"],
+                         "paper: ECC 1.5-1.7x, DNN-surgery 1.3-1.49x"))
+    emit("fig4_5", rows)
+    print(f"fig4_5,elapsed_s,{time.time()-t0:.1f},wall-clock")
+
+
+if __name__ == "__main__":
+    run()

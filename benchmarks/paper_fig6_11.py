@@ -1,0 +1,53 @@
+"""Fig.6-11: ECC-NOMA vs baselines under varying network conditions:
+user density (Fig.6/9), number of subchannels (Fig.7/10), workload (Fig.8/11).
+Normalization = Device-Only. VGG16 profile (the paper's largest chain)."""
+import time
+
+import jax.numpy as jnp
+
+from repro.core import profiles
+from benchmarks.paper_common import emit, mean_outcomes
+
+
+def run():
+    t0 = time.time()
+    prof = profiles.vgg16()
+    rows = []
+    # Fig.6/9: user density sweep (users per AP: 4..24 with 3 APs)
+    for density in (4, 8, 16, 24):
+        acc = mean_outcomes(density * 3, 3, 4, prof, seeds=2)
+        dev = acc["device_only"]
+        for m in ("ecc_noma", "neurosurgeon", "dnn_surgery", "edge_only"):
+            rows.append((f"density{density}:{m}:latency_speedup",
+                         dev["T"] / acc[m]["T"],
+                         "paper Fig.6: ECC-NOMA advantage shrinks w/ density"))
+            rows.append((f"density{density}:{m}:energy_reduction",
+                         dev["E"] / acc[m]["E"], "paper Fig.9"))
+    # Fig.7/10: subchannel count sweep (fixed 24 users, 3 APs)
+    for m_sub in (2, 4, 6, 8):
+        acc = mean_outcomes(24, 3, m_sub, prof, seeds=2)
+        dev = acc["device_only"]
+        rows.append((f"subch{m_sub}:ecc_noma:latency_speedup",
+                     dev["T"] / acc["ecc_noma"]["T"],
+                     "paper Fig.7: rises then falls (bandwidth split)"))
+        rows.append((f"subch{m_sub}:ecc_noma:energy_reduction",
+                     dev["E"] / acc["ecc_noma"]["E"], "paper Fig.10"))
+    # Fig.8/11: workload sweep (K inferences per user -> scale profile)
+    import dataclasses
+    for k in (1, 2, 4, 8):
+        scaled = dataclasses.replace(
+            prof, fl=prof.fl * k, w=prof.w * k, m_down=prof.m_down * k)
+        acc = mean_outcomes(12, 3, 4, scaled, seeds=2)
+        dev = acc["device_only"]
+        for m in ("ecc_noma", "neurosurgeon"):
+            rows.append((f"workload{k}x:{m}:latency_speedup",
+                         dev["T"] / acc[m]["T"],
+                         "paper Fig.8: ECC-NOMA advantage grows w/ load"))
+            rows.append((f"workload{k}x:{m}:energy_reduction",
+                         dev["E"] / acc[m]["E"], "paper Fig.11"))
+    emit("fig6_11", rows)
+    print(f"fig6_11,elapsed_s,{time.time()-t0:.1f},wall-clock")
+
+
+if __name__ == "__main__":
+    run()

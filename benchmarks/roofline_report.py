@@ -1,0 +1,32 @@
+"""Emit the roofline table rows (one per dry-run cell) in CSV form.
+Requires artifacts/dryrun/*.json (python -m repro.launch.dryrun --all)."""
+from repro.launch.roofline import load_cells
+from benchmarks.paper_common import emit
+
+
+def run():
+    cells = load_cells("pod16x16")
+    rows = []
+    for c in cells:
+        tag = f"{c['arch']}:{c['shape']}"
+        if c.get("skipped"):
+            rows.append((f"{tag}:skipped", 0.0, c["skipped"]))
+            continue
+        r = c.get("roofline")
+        if not r:
+            continue
+        rows.append((f"{tag}:compute_s", r["compute_s"], ""))
+        rows.append((f"{tag}:memory_s", r["memory_s"], ""))
+        rows.append((f"{tag}:collective_s", r["collective_s"],
+                     f"dominant={r['dominant']}"))
+        rows.append((f"{tag}:model_vs_hlo", r["model_vs_hlo_flops"],
+                     "useful-compute fraction"))
+        rows.append((f"{tag}:peak_GiB", c["memory"]["peak_bytes_est"] / 2**30,
+                     "per device"))
+    if not rows:
+        rows = [("no_artifacts", 0.0, "run python -m repro.launch.dryrun --all")]
+    emit("roofline", rows)
+
+
+if __name__ == "__main__":
+    run()

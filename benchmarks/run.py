@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure + roofline + kernels.
+Prints ``name,label,value,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2_3,...]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        kernel_bench,
+        ligd_properties,
+        paper_fig2_3,
+        paper_fig4_5,
+        paper_fig6_11,
+        roofline_report,
+    )
+
+    all_benches = {
+        "fig2_3": paper_fig2_3.run,
+        "fig4_5": paper_fig4_5.run,
+        "fig6_11": paper_fig6_11.run,
+        "ligd_properties": ligd_properties.run,
+        "kernel_bench": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(all_benches))
+    t0 = time.time()
+    print("name,label,value,derived")
+    for name in chosen:
+        try:
+            all_benches[name]()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name},ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+            print(f"{name},error,0,{type(e).__name__}")
+    print(f"total,elapsed_s,{time.time()-t0:.1f},all benchmarks")
+
+
+if __name__ == "__main__":
+    main()

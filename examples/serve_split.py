@@ -1,0 +1,17 @@
+"""End-to-end split serving: ECC plans the split for an LM architecture,
+then batched requests run through the device-stage / edge-stage programs
+(the paper's deployment, with the NOMA uplink simulated).
+
+  PYTHONPATH=src python examples/serve_split.py --arch qwen1.5-0.5b
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "qwen1.5-0.5b"])
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.argv += ["--reduced", "--requests", "4", "--seq", "48",
+                 "--new-tokens", "4"]
+    main()

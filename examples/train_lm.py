@@ -1,0 +1,25 @@
+"""End-to-end training driver example: a ~100M-class LM (xlstm-125m, full
+config at reduced sequence/batch so it runs on CPU) for a few hundred steps
+with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(On a real pod you would pass --mesh 16x16 and the full batch; this example
+exercises the same code path end-to-end on 1 device.)
+"""
+import argparse
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0],
+                "--arch", args.arch, "--reduced",
+                "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--mesh", "1x1",
+                "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "100"]
+    main()

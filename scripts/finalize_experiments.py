@@ -1,0 +1,93 @@
+"""Regenerate the roofline tables inside EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import roofline as rl  # noqa: E402
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(mesh, suffix=""):
+    import glob
+    cells = []
+    d = os.path.join(REPO, "artifacts", f"dryrun{suffix}")
+    for p in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        cells.append(json.load(open(p)))
+    return cells
+
+
+def perf_compare():
+    """Per-cell baseline vs optimized dominant-term table."""
+    base = {(c["arch"], c["shape"]): c for c in load("pod16x16", "_baseline")}
+    opt = {(c["arch"], c["shape"]): c for c in load("pod16x16", "_opt")}
+    rows = ["| arch | shape | baseline bound | optimized bound | gain | "
+            "baseline peak GiB | optimized peak GiB |",
+            "|---|---|---|---|---|---|---|"]
+    for key in sorted(opt):
+        b, o = base.get(key), opt[key]
+        if not b or b.get("skipped") or o.get("skipped"):
+            continue
+        rb, ro = b.get("roofline"), o.get("roofline")
+        if not rb or not ro:
+            continue
+        gain = rb["bound_s"] / max(ro["bound_s"], 1e-12)
+        rows.append(
+            f"| {key[0]} | {key[1]} | {rl.fmt_s(rb['bound_s'])} "
+            f"({rb['dominant'][:4]}) | {rl.fmt_s(ro['bound_s'])} "
+            f"({ro['dominant'][:4]}) | **{gain:.1f}×** | "
+            f"{b['memory']['peak_bytes_est'] / 2**30:.1f} | "
+            f"{o['memory']['peak_bytes_est'] / 2**30:.1f} |")
+    return "\n".join(rows)
+
+
+def multi_pod_summary(suffix="_opt"):
+    cells = [c for c in load("pod2x16x16", suffix) if not c.get("skipped")]
+    if not cells:
+        cells = [c for c in load("pod2x16x16", "") if not c.get("skipped")]
+    n = len(cells)
+    ok = sum(1 for c in cells if "memory" in c)
+    lines = [f"multi-pod (512-chip) compiles: {ok}/{n} live cells",
+             "", "| arch | shape | peak GiB/dev | collective kinds |",
+             "|---|---|---|---|"]
+    for c in cells:
+        kinds = ",".join(sorted(c["hlo_full"]["per_kind_bytes"])) or "none"
+        lines.append(f"| {c['arch']} | {c['shape']} | "
+                     f"{c['memory']['peak_bytes_est'] / 2**30:.2f} | {kinds} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = os.path.join(REPO, "EXPERIMENTS.md")
+    text = open(path).read()
+
+    opt_cells = load("pod16x16", "_opt")
+    base_cells = load("pod16x16", "_baseline")
+    blocks = {
+        "ROOFLINE-OPT": ("### Optimized roofline (single pod, per device)\n\n"
+                         + rl.table(opt_cells) + "\n" + rl.summary(opt_cells)),
+        "ROOFLINE-BASELINE": ("### Baseline roofline (single pod, per device)\n\n"
+                              + rl.table(base_cells)),
+        "PERF-FINAL": ("### Final before/after (all cells)\n\n" + perf_compare()),
+        "MULTIPOD": multi_pod_summary(),
+    }
+    for marker, content in blocks.items():
+        begin, end = f"<!-- {marker} -->", f"<!-- /{marker} -->"
+        block = f"{begin}\n{content}\n{end}"
+        if begin in text:
+            pre = text.split(begin)[0]
+            post = text.split(end)[1] if end in text else ""
+            text = pre + block + post
+        else:
+            text += "\n\n" + block
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated with", list(blocks))
+
+
+if __name__ == "__main__":
+    main()

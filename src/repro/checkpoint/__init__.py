@@ -1,0 +1,1 @@
+from repro.checkpoint.manager import CheckpointManager, load_checkpoint, save_checkpoint  # noqa: F401

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing (numpy-based; orbax is not available offline).
+
+Properties:
+  * atomic: writes go to <dir>/tmp.<step> then os.replace -> step_<N>; a
+    crash mid-write never corrupts the latest checkpoint.
+  * async: save() returns immediately, a background thread serializes; the
+    train loop keeps stepping (snapshot is taken on the caller's thread via
+    jax.device_get so the arrays are immutable).
+  * elastic: files store *global* arrays per host-shard; restore re-shards
+    onto whatever mesh/device-count the new job uses (device count changes
+    between save and restore are fine -- shardings are recomputed from the
+    logical specs, not persisted).
+  * bounded retention: keep_n newest checkpoints are retained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, process_index: int = 0):
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"tmp.{step}.{process_index}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    flat, treedef = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(flat)}
+    np.savez(os.path.join(tmp, f"shard_{process_index}.npz"), **arrays)
+    meta = {
+        "step": int(step),
+        "treedef": str(treedef),
+        "n_leaves": len(flat),
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_checkpoint(directory: str, tree_like, step: int | None = None,
+                    shardings=None):
+    """Restore into the structure of `tree_like`; device_put with `shardings`
+    (pytree of NamedSharding) re-shards for the current mesh (elastic)."""
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory)
+        if d.startswith("step_")
+    )
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    flat, treedef = _flatten(tree_like)
+    assert len(flat) == len(data.files), (
+        f"checkpoint has {len(data.files)} leaves, model expects {len(flat)}")
+    loaded = [data[f"a{i}"] for i in range(len(flat))]
+    if shardings is not None:
+        sflat, _ = _flatten(shardings)
+        loaded = [jax.device_put(a, s) for a, s in zip(loaded, sflat)]
+    else:
+        loaded = [jax.numpy.asarray(a) for a in loaded]
+    return jax.tree_util.tree_unflatten(treedef, loaded), step
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.directory = directory
+        self.keep_n = keep_n
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save_async(self, step: int, tree):
+        self.wait()
+        # snapshot on caller thread: device_get makes host copies now
+        flat, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in flat]
+        snap = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, snap)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest_step(self):
+        try:
+            steps = sorted(
+                int(d.split("_")[1]) for d in os.listdir(self.directory)
+                if d.startswith("step_"))
+            return steps[-1] if steps else None
+        except FileNotFoundError:
+            return None
+
+    def restore(self, tree_like, shardings=None, step=None):
+        return load_checkpoint(self.directory, tree_like, step, shardings)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_"))
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

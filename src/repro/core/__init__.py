@@ -1,0 +1,39 @@
+"""ECC / Li-GD core: the paper's contribution as a composable JAX module."""
+from repro.core.types import (  # noqa: F401
+    ComputeConstants,
+    EccWeights,
+    GdConfig,
+    GdVars,
+    ModelProfile,
+    NetworkEnv,
+    RadioConstants,
+    SplitPlan,
+    lam,
+    make_weights,
+)
+from repro.core.channel import (  # noqa: F401
+    downlink_rates,
+    downlink_sinr,
+    make_env,
+    oma_rates,
+    uplink_rates,
+    uplink_sinr,
+    user_rates,
+)
+from repro.core.utility import delay_energy, per_user_utility, utility  # noqa: F401
+from repro.core.li_gd import (  # noqa: F401
+    GdResult,
+    LoopResult,
+    cold_init,
+    gd_solve,
+    li_gd_loop,
+    plain_gd_loop,
+    project_simplex,
+    project_simplex_floor,
+    greedy_round_dn,
+    greedy_round_up,
+    round_beta,
+    solve,
+    to_physical,
+)
+from repro.core import baselines, planner, profiles  # noqa: F401

@@ -1,0 +1,190 @@
+"""Evaluation baselines the paper compares against (Sec. VI):
+
+  Device-Only    whole model on the device; no radio use.
+  Edge-Only      whole model offloaded (split s=0), max power, best channel.
+  Neurosurgeon   [38] latency-only split per user, OMA channel, full edge res.
+  DNN-Surgery    [14] latency-only split, OMA, edge resources shared fairly.
+  ECC-OMA        the paper's ECC optimizer but over OMA channels.
+
+All return per-user (T, E) so figures can be normalized the way the paper
+normalizes (to Device-Only, or to Neurosurgeon for Fig.4/5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel
+from repro.core.utility import delay_energy as _delay_energy
+from repro.core.types import (
+    GdConfig,
+    Array,
+    EccWeights,
+    GdVars,
+    ModelProfile,
+    NetworkEnv,
+)
+
+
+class Outcome(NamedTuple):
+    T: Array   # (U,) seconds
+    E: Array   # (U,) joules
+    s: Array   # () or (U,) split index
+
+
+def device_only(env: NetworkEnv, prof: ModelProfile) -> Outcome:
+    comp = env.comp
+    z = jnp.sum(prof.fl)
+    u = env.n_users
+    T = jnp.full((u,), z / comp.c_device)
+    E = jnp.full((u,), comp.xi_device * comp.c_device**2 * z)
+    return Outcome(T=T, E=E, s=jnp.full((), prof.n_layers, jnp.int32))
+
+
+def _greedy_vars(env: NetworkEnv, r_scale: Array | float = 1.0) -> GdVars:
+    """Max power, best own-gain subchannel, full edge allocation."""
+    rc, cc = env.radio, env.comp
+    best_up = jnp.argmax(env.own_gain_up(), axis=-1)
+    best_dn = jnp.argmax(env.own_gain_dn(), axis=-1)
+    m = env.n_sub
+    u = env.n_users
+    return GdVars(
+        beta_up=jax.nn.one_hot(best_up, m),
+        beta_dn=jax.nn.one_hot(best_dn, m),
+        p_up=jnp.full((u,), rc.p_up_max_w),
+        p_dn=jnp.full((u,), rc.p_dn_max_w),
+        r=jnp.full((u,), cc.r_max) * r_scale,
+    )
+
+
+def edge_only(env: NetworkEnv, prof: ModelProfile) -> Outcome:
+    v = _greedy_vars(env)
+    s = jnp.zeros((), jnp.int32)
+    T, E = _delay_energy(env, prof, s, v)
+    return Outcome(T=T, E=E, s=s)
+
+
+def _oma_outcome_per_split(env, prof, v, r_cap):
+    """(T, E) per (split, user) with OMA rates; used by latency-only planners."""
+    comp = env.comp
+    r_up, r_dn = channel.oma_rates(env, v.p_up, v.p_dn)
+    pre = prof.prefix_flops()[:, None]            # (F+1, 1)
+    suf = prof.suffix_flops()[:, None]
+    w = prof.w[:, None]
+    m_dn = prof.m_down[:, None]
+    speed = jnp.power(r_cap, comp.lam_exponent) * comp.c_min_edge
+    T = (pre / comp.c_device + suf / speed + w / r_up[None, :] + m_dn / r_dn[None, :])
+    E = (
+        comp.xi_device * comp.c_device**2 * pre
+        + comp.xi_edge * speed**2 * suf
+        + v.p_up[None, :] * w / r_up[None, :]
+        + v.p_dn[None, :] * m_dn / r_dn[None, :]
+    )
+    return T, E  # (F+1, U)
+
+
+def neurosurgeon(env: NetworkEnv, prof: ModelProfile) -> Outcome:
+    """Latency-optimal split per user; ignores energy and edge contention."""
+    v = _greedy_vars(env)
+    T, E = _oma_outcome_per_split(env, prof, v, env.comp.r_max)
+    s = jnp.argmin(T, axis=0)                     # (U,) per-user split
+    take = lambda a: jnp.take_along_axis(a, s[None, :], axis=0)[0]
+    return Outcome(T=take(T), E=take(E), s=s.astype(jnp.int32))
+
+
+def dnn_surgery(env: NetworkEnv, prof: ModelProfile) -> Outcome:
+    """Latency-only split but edge compute is shared across the cell's
+    offloaders ([14] models limited edge resources)."""
+    counts = jnp.sum(env.same_cell(), axis=1).astype(jnp.float32)
+    r_cap = jnp.maximum(env.comp.r_max / counts, env.comp.r_min)  # (U,)
+    v = _greedy_vars(env)
+    T, E = _oma_outcome_per_split(env, prof, v, r_cap[None, :])
+    s = jnp.argmin(T, axis=0)
+    take = lambda a: jnp.take_along_axis(a, s[None, :], axis=0)[0]
+    return Outcome(T=take(T), E=take(E), s=s.astype(jnp.int32))
+
+
+def ecc_oma(
+    env: NetworkEnv, prof: ModelProfile, w: EccWeights, cfg: GdConfig = GdConfig()
+) -> Outcome:
+    """The ECC tradeoff optimizer over OMA channels: GD on (p, r) per split
+    with warm starts (no subchannel variable -- OMA pre-assigns spectrum)."""
+    comp = env.comp
+    rc = env.radio
+
+    def phys(norm):
+        return (
+            rc.p_up_min_w + norm["p_up"] * (rc.p_up_max_w - rc.p_up_min_w),
+            rc.p_dn_min_w + norm["p_dn"] * (rc.p_dn_max_w - rc.p_dn_min_w),
+            comp.r_min + norm["r"] * (comp.r_max - comp.r_min),
+        )
+
+    pre = prof.prefix_flops()
+    suf = prof.suffix_flops()
+
+    def gamma_fn(norm, s):
+        p_up, p_dn, r = phys(norm)
+        r_up, r_dn = channel.oma_rates(env, p_up, p_dn)
+        speed = jnp.power(r, comp.lam_exponent) * comp.c_min_edge
+        T = pre[s] / comp.c_device + suf[s] / speed + prof.w[s] / r_up + prof.m_down[s] / r_dn
+        E = (
+            comp.xi_device * comp.c_device**2 * pre[s]
+            + comp.xi_edge * speed**2 * suf[s]
+            + p_up * prof.w[s] / r_up
+            + p_dn * prof.m_down[s] / r_dn
+        )
+        return jnp.sum(w.w_T * T + w.w_E * E)
+
+    grad_fn = jax.value_and_grad(gamma_fn)
+
+    def solve_one(carry, s):
+        def body(state):
+            norm, _, it, _ = state
+            g0, g = grad_fn(norm, s)
+            new = jax.tree.map(
+                lambda a, b: jnp.clip(a - cfg.step_size * b, 0.0, 1.0), norm, g
+            )
+            g1 = gamma_fn(new, s)
+            done = jnp.abs(g1 - g0) < cfg.eps * jnp.maximum(1.0, jnp.abs(g0))
+            return new, g1, it + 1, done
+
+        def cond(state):
+            _, _, it, done = state
+            return jnp.logical_and(it < cfg.max_iters, jnp.logical_not(done))
+
+        norm, gamma, _, _ = jax.lax.while_loop(
+            cond, body, (carry, gamma_fn(carry, s), jnp.int32(0), jnp.bool_(False))
+        )
+        return norm, (gamma, norm)
+
+    u = env.n_users
+    init = {"p_up": jnp.full((u,), 0.5), "p_dn": jnp.full((u,), 0.5),
+            "r": jnp.full((u,), 0.5)}
+    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
+    _, (gammas, norms) = jax.lax.scan(solve_one, init, splits)
+    s_star = jnp.argmin(gammas).astype(jnp.int32)
+    best = jax.tree.map(lambda x: x[s_star], norms)
+    p_up, p_dn, r = phys(best)
+    r_up, r_dn = channel.oma_rates(env, p_up, p_dn)
+    speed = jnp.power(r, comp.lam_exponent) * comp.c_min_edge
+    T = (pre[s_star] / comp.c_device + suf[s_star] / speed
+         + prof.w[s_star] / r_up + prof.m_down[s_star] / r_dn)
+    E = (comp.xi_device * comp.c_device**2 * pre[s_star]
+         + comp.xi_edge * speed**2 * suf[s_star]
+         + p_up * prof.w[s_star] / r_up + p_dn * prof.m_down[s_star] / r_dn)
+    return Outcome(T=T, E=E, s=s_star)
+
+
+def evaluate_plan(env: NetworkEnv, prof: ModelProfile, plan, w: EccWeights) -> Outcome:
+    """Evaluate a discrete SplitPlan under the true NOMA rate model."""
+    v = GdVars(
+        beta_up=jax.nn.one_hot(plan.sub_up, env.n_sub),
+        beta_dn=jax.nn.one_hot(plan.sub_dn, env.n_sub),
+        p_up=plan.p_up,
+        p_dn=plan.p_dn,
+        r=plan.r,
+    )
+    T, E = _delay_energy(env, prof, plan.s, v)
+    return Outcome(T=T, E=E, s=plan.s)

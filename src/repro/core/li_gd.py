@@ -1,0 +1,331 @@
+"""The Loop-iteration Gradient Descent (Li-GD) optimizer — paper Table I.
+
+Design notes
+------------
+* The solver works in *normalized* coordinates: subchannel shares beta live on
+  the probability simplex (constraint 18.e/18.f) with a small floor beta_min;
+  powers and compute units are mapped to [0, 1] via their boxes (18.c/18.d).
+  Normalization makes a single scalar step size meaningful across variables
+  with wildly different physical scales (Watts vs compute units); it is a
+  reparameterization, not a change of the optimization problem.
+* Gradients come from jax.grad of the utility (paper derives them by hand in
+  eqs. 23-30; autodiff computes the same derivatives exactly).
+* The per-split-point solve is a lax.while_loop with the paper's stopping
+  rules (Table I lines 6/9): ||g|| < eps, |Gamma_{k+1}-Gamma_k| < eps, or
+  max variable change < eps, capped at max_iters.
+* Li-GD chains split points via lax.scan, warm-starting layer s+1 from the
+  optimum of layer s (Table I lines 13-16). plain_gd is the cold-start
+  baseline used to validate Corollary 4 (iteration-count reduction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.utility import utility as _utility
+from repro.core.types import (
+    Array,
+    EccWeights,
+    GdConfig,
+    GdVars,
+    ModelProfile,
+    NetworkEnv,
+    SplitPlan,
+)
+
+
+# --------------------------------------------------------------------------
+# projections
+# --------------------------------------------------------------------------
+def project_simplex(y: Array, total: float = 1.0) -> Array:
+    """Euclidean projection of each row of y onto {x >= 0, sum x = total}."""
+    m = y.shape[-1]
+    u = jnp.sort(y, axis=-1)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1) - total
+    idx = jnp.arange(1, m + 1, dtype=y.dtype)
+    cond = (u - css / idx) > 0
+    rho = jnp.maximum(jnp.sum(cond, axis=-1), 1)
+    theta = jnp.take_along_axis(css, rho[..., None] - 1, axis=-1) / rho[..., None].astype(y.dtype)
+    return jnp.maximum(y - theta, 0.0)
+
+
+def project_simplex_floor(y: Array, floor: float) -> Array:
+    """Projection onto {x >= floor, sum x = 1} (rows)."""
+    m = y.shape[-1]
+    z = project_simplex(y - floor, total=1.0 - m * floor)
+    return z + floor
+
+
+def _project(norm: dict, beta_min: float) -> dict:
+    return {
+        "beta_up": project_simplex_floor(norm["beta_up"], beta_min),
+        "beta_dn": project_simplex_floor(norm["beta_dn"], beta_min),
+        "p_up": jnp.clip(norm["p_up"], 0.0, 1.0),
+        "p_dn": jnp.clip(norm["p_dn"], 0.0, 1.0),
+        "r": jnp.clip(norm["r"], 0.0, 1.0),
+    }
+
+
+def to_physical(norm: dict, env: NetworkEnv) -> GdVars:
+    rc, cc = env.radio, env.comp
+    return GdVars(
+        beta_up=norm["beta_up"],
+        beta_dn=norm["beta_dn"],
+        p_up=rc.p_up_min_w + norm["p_up"] * (rc.p_up_max_w - rc.p_up_min_w),
+        p_dn=rc.p_dn_min_w + norm["p_dn"] * (rc.p_dn_max_w - rc.p_dn_min_w),
+        r=cc.r_min + norm["r"] * (cc.r_max - cc.r_min),
+    )
+
+
+def cold_init(env: NetworkEnv) -> dict:
+    """Table I line 1: start mid-box / uniform simplex, no prior knowledge."""
+    u, m = env.n_users, env.n_sub
+    one = jnp.ones((u, m)) / m
+    half = jnp.full((u,), 0.5)
+    return {"beta_up": one, "beta_dn": one, "p_up": half, "p_dn": half, "r": half}
+
+
+# --------------------------------------------------------------------------
+# single-split-point projected GD (Table I lines 3-12)
+# --------------------------------------------------------------------------
+class GdResult(NamedTuple):
+    norm: dict
+    gamma: Array
+    iters: Array
+    grad_norm: Array
+
+
+def _tree_norm(t) -> Array:
+    leaves = jax.tree_util.tree_leaves(t)
+    return jnp.sqrt(sum(jnp.sum(x * x) for x in leaves))
+
+
+def _tree_maxdiff(a, b) -> Array:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return jnp.max(jnp.stack([jnp.max(jnp.abs(x - y)) for x, y in zip(la, lb)]))
+
+
+def gd_solve(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    s: Array,
+    w: EccWeights,
+    init_norm: dict,
+    cfg: GdConfig,
+) -> GdResult:
+    beta_min = env.radio.beta_min
+
+    def gamma_fn(norm):
+        return _utility(env, prof, s, to_physical(norm, env), w)
+
+    grad_fn = jax.value_and_grad(gamma_fn)
+    adam = cfg.optimizer == "adam"
+
+    def cond(state):
+        _, _, _, it, done = state
+        return jnp.logical_and(it < cfg.max_iters, jnp.logical_not(done))
+
+    def body(state):
+        norm, mom, gamma_prev, it, _ = state
+        gamma, g = grad_fn(norm)
+        gnorm = _tree_norm(g)
+        if adam:
+            m1, m2 = mom
+            m1 = jax.tree.map(lambda a, b: cfg.adam_b1 * a + (1 - cfg.adam_b1) * b, m1, g)
+            m2 = jax.tree.map(lambda a, b: cfg.adam_b2 * a + (1 - cfg.adam_b2) * b * b, m2, g)
+            t = (it + 1).astype(jnp.float32)
+            step = jax.tree.map(
+                lambda a, b: cfg.step_size
+                * (a / (1 - cfg.adam_b1**t))
+                / (jnp.sqrt(b / (1 - cfg.adam_b2**t)) + 1e-8),
+                m1,
+                m2,
+            )
+            mom = (m1, m2)
+        else:
+            step = jax.tree.map(lambda x: cfg.step_size * x, g)
+        new = _project(jax.tree.map(lambda a, b: a - b, norm, step), beta_min)
+        gamma_new = gamma_fn(new)
+        done = jnp.logical_or(
+            gnorm < cfg.eps,
+            jnp.logical_or(
+                jnp.abs(gamma_new - gamma) < cfg.eps * jnp.maximum(1.0, jnp.abs(gamma)),
+                _tree_maxdiff(new, norm) < cfg.eps,
+            ),
+        )
+        return new, mom, gamma_new, it + 1, done
+
+    zero_mom = (
+        jax.tree.map(jnp.zeros_like, init_norm),
+        jax.tree.map(jnp.zeros_like, init_norm),
+    )
+    norm0 = _project(init_norm, beta_min)
+    state0 = (norm0, zero_mom, gamma_fn(norm0), jnp.int32(0), jnp.bool_(False))
+    norm, _, gamma, it, _ = jax.lax.while_loop(cond, body, state0)
+    _, g = grad_fn(norm)
+    return GdResult(norm=norm, gamma=gamma, iters=it, grad_norm=_tree_norm(g))
+
+
+# --------------------------------------------------------------------------
+# Li-GD: warm-started loop over split points (Table I)
+# --------------------------------------------------------------------------
+class LoopResult(NamedTuple):
+    gammas: Array      # (F+1,)
+    iters: Array       # (F+1,)
+    norms: dict        # stacked per-split optima, leaves lead with (F+1, ...)
+    total_iters: Array
+
+
+def li_gd_loop(
+    env: NetworkEnv, prof: ModelProfile, w: EccWeights, cfg: GdConfig
+) -> LoopResult:
+    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
+
+    def step(carry_norm, s):
+        res = gd_solve(env, prof, s, w, carry_norm, cfg)
+        return res.norm, (res.gamma, res.iters, res.norm)
+
+    _, (gammas, iters, norms) = jax.lax.scan(step, cold_init(env), splits)
+    return LoopResult(gammas=gammas, iters=iters, norms=norms,
+                      total_iters=jnp.sum(iters))
+
+
+def plain_gd_loop(
+    env: NetworkEnv, prof: ModelProfile, w: EccWeights, cfg: GdConfig
+) -> LoopResult:
+    """Cold-start GD per split point (the paper's 'traditional GD' baseline)."""
+    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
+    init = cold_init(env)
+
+    def step(_, s):
+        res = gd_solve(env, prof, s, w, init, cfg)
+        return 0, (res.gamma, res.iters, res.norm)
+
+    _, (gammas, iters, norms) = jax.lax.scan(step, 0, splits)
+    return LoopResult(gammas=gammas, iters=iters, norms=norms,
+                      total_iters=jnp.sum(iters))
+
+
+# --------------------------------------------------------------------------
+# rounding (Table I lines 17-20 + Corollary 5) and plan assembly
+# --------------------------------------------------------------------------
+def round_beta(beta: Array, paper_rule: bool = True) -> tuple[Array, Array, Array]:
+    """Paper rule: beta > 0.5 -> 1 else 0. Returns (onehot, chosen, violations).
+
+    When the 0.5-rule breaks constraint (18.e) (no entry > 0.5 -- possible
+    since rows live on the simplex), we repair with argmax and count it."""
+    if paper_rule:
+        hard = (beta > 0.5).astype(beta.dtype)
+        viol = jnp.sum(jnp.abs(jnp.sum(hard, axis=-1) - 1.0) > 0.5)
+    else:
+        viol = jnp.zeros((), beta.dtype)
+    chosen = jnp.argmax(beta, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(chosen, beta.shape[-1], dtype=beta.dtype)
+    return onehot, chosen, viol
+
+
+def greedy_round_up(env: NetworkEnv, beta: Array, p: Array) -> Array:
+    """Load-aware sequential rounding (beyond-paper; see EXPERIMENTS §Perf).
+
+    At high SINR log2(1+SINR) compresses channel differences, so the relaxed
+    optimum is interior (near-uniform beta) and both the paper's 0.5-rule and
+    naive argmax collapse users onto one channel. Greedy: assign users one by
+    one to the subchannel maximizing their SINR given interference from the
+    users already assigned."""
+    own = env.own_gain_up()                          # (U, M)
+    # gain of user v at user u's AP: (U_v, U_u, M)
+    g_at = env.g_up[:, env.ap, :]
+
+    def step(assigned_interf, u):
+        # assigned_interf: (U, M) interference each user would see at its AP
+        sinr = p[u] * own[u] / (assigned_interf[u] + env.noise_up)
+        m = jnp.argmax(beta[u] * jnp.log1p(sinr))
+        add = p[u] * g_at[u] * jax.nn.one_hot(m, env.n_sub)[None, :]
+        return assigned_interf + add, m.astype(jnp.int32)
+
+    init = jnp.zeros_like(own)
+    _, subs = jax.lax.scan(step, init, jnp.arange(env.n_users))
+    return subs
+
+
+def greedy_round_dn(env: NetworkEnv, beta: Array, p: Array) -> Array:
+    """Downlink analogue: interference at the *user* from other APs' tx."""
+    own = env.own_gain_dn()                          # (U, M)
+    g_all = jnp.swapaxes(env.g_dn, 0, 1)             # (U, N, M) AP->user gains
+    cell = jax.nn.one_hot(env.ap, env.n_aps)         # (U, N)
+
+    def step(ap_tx, u):
+        # ap_tx: (N, M) power each AP already spends per subchannel
+        interf = jnp.einsum("nm,nm->m", ap_tx, g_all[u]) - ap_tx[env.ap[u]] * own[u]
+        interf = jnp.maximum(interf, 0.0)
+        sinr = p[u] * own[u] / (interf + env.noise_dn)
+        m = jnp.argmax(beta[u] * jnp.log1p(sinr))
+        add = p[u] * jnp.outer(cell[u], jax.nn.one_hot(m, env.n_sub))
+        return ap_tx + add, m.astype(jnp.int32)
+
+    _, subs = jax.lax.scan(step, jnp.zeros((env.n_aps, env.n_sub)),
+                           jnp.arange(env.n_users))
+    return subs
+
+
+def assemble_plan(
+    env: NetworkEnv, loop: LoopResult, prof: ModelProfile,
+    rounding: str = "best", w: EccWeights | None = None,
+) -> SplitPlan:
+    s_star = jnp.argmin(loop.gammas).astype(jnp.int32)
+    best = jax.tree.map(lambda x: x[s_star], loop.norms)
+    v = to_physical(best, env)
+    _, sub_up, viol_up = round_beta(v.beta_up)
+    _, sub_dn, viol_dn = round_beta(v.beta_dn)
+    if rounding in ("greedy", "best"):
+        g_up = greedy_round_up(env, v.beta_up, v.p_up)
+        g_dn = greedy_round_dn(env, v.beta_dn, v.p_dn)
+        if rounding == "greedy":
+            sub_up, sub_dn = g_up, g_dn
+        else:
+            # best-of: evaluate the discrete utility under both roundings
+            # (beyond-paper; the paper's 0.5-rule is kept for Cor.5 metrics).
+            assert w is not None
+
+            def disc_util(su, sd):
+                vv = GdVars(
+                    beta_up=jax.nn.one_hot(su, env.n_sub),
+                    beta_dn=jax.nn.one_hot(sd, env.n_sub),
+                    p_up=v.p_up, p_dn=v.p_dn, r=v.r,
+                )
+                return _utility(env, prof, s_star, vv, w)
+
+            u_argmax = disc_util(sub_up, sub_dn)
+            u_greedy = disc_util(g_up, g_dn)
+            pick = (u_greedy < u_argmax)
+            sub_up = jnp.where(pick, g_up, sub_up)
+            sub_dn = jnp.where(pick, g_dn, sub_dn)
+    return SplitPlan(
+        s=s_star,
+        sub_up=sub_up,
+        sub_dn=sub_dn,
+        p_up=v.p_up,
+        p_dn=v.p_dn,
+        r=v.r,
+        utility=loop.gammas[s_star],
+        per_layer_utility=loop.gammas,
+        iters=loop.iters,
+        rounding_violations=viol_up + viol_dn,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "method", "rounding"))
+def solve(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    w: EccWeights,
+    cfg: GdConfig = GdConfig(),
+    method: str = "li_gd",
+    rounding: str = "best",
+) -> SplitPlan:
+    loop = {"li_gd": li_gd_loop, "gd": plain_gd_loop}[method](env, prof, w, cfg)
+    return assemble_plan(env, loop, prof, rounding=rounding, w=w)

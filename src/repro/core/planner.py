@@ -1,0 +1,86 @@
+"""ECC planner: the public API that turns (network env, model profile,
+QoS weights) into a discrete SplitPlan. This is the paper's contribution
+packaged as the framework's first-class feature -- the serving runtime
+(repro.runtime.split_serve) consumes SplitPlan to place stage boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, li_gd, profiles
+from repro.core.types import (
+    EccWeights,
+    GdConfig,
+    ModelProfile,
+    NetworkEnv,
+    SplitPlan,
+    make_weights,
+)
+
+
+def plan(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    weights: EccWeights | None = None,
+    cfg: GdConfig = GdConfig(),
+    method: str = "li_gd",
+    rounding: str = "best",
+) -> SplitPlan:
+    """method: 'li_gd' (paper), 'gd' (cold-start baseline).
+    rounding: 'best' (best-of argmax/greedy, beyond-paper), 'greedy',
+    or 'paper' (0.5-rule with argmax repair)."""
+    if weights is None:
+        weights = make_weights(env.n_users)
+    return li_gd.solve(env, prof, weights, cfg, method=method, rounding=rounding)
+
+
+def plan_for_arch(env: NetworkEnv, arch_cfg, seq: int, batch: int = 1,
+                  weights: EccWeights | None = None,
+                  cfg: GdConfig = GdConfig()) -> SplitPlan:
+    """Plan a split for one of the assigned LM architectures."""
+    prof = profiles.from_arch_config(arch_cfg, seq=seq, batch=batch)
+    return plan(env, prof, weights, cfg)
+
+
+def plan_batch(envs: NetworkEnv, prof: ModelProfile,
+               weights: EccWeights | None = None,
+               cfg: GdConfig = GdConfig(), method: str = "li_gd") -> SplitPlan:
+    """Batched Li-GD over stacked channel realizations (beyond-paper):
+    `envs` is a NetworkEnv whose array leaves carry a leading Monte-Carlo
+    dim (same radio/compute constants). One compiled program optimizes all
+    draws in parallel -- this is the production shape for re-planning under
+    fading (the paper re-runs the solver per draw)."""
+    n_users = envs.g_up.shape[1]
+    if weights is None:
+        weights = make_weights(n_users)
+
+    def one(env):
+        return li_gd.solve(env, prof, weights, cfg, method=method)
+
+    import jax
+    return jax.vmap(one)(envs)
+
+
+def stack_envs(envs: list[NetworkEnv]) -> NetworkEnv:
+    """Stack same-shape environments along a leading Monte-Carlo dim."""
+    import jax
+    return jax.tree.map(lambda *xs: jax.numpy.stack(xs), *envs)
+
+
+def compare_all(env: NetworkEnv, prof: ModelProfile,
+                weights: EccWeights | None = None,
+                cfg: GdConfig = GdConfig()) -> dict:
+    """Run ECC-NOMA + every baseline; returns {name: Outcome}. Used by the
+    paper-figure benchmarks."""
+    if weights is None:
+        weights = make_weights(env.n_users)
+    p = plan(env, prof, weights, cfg)
+    return {
+        "ecc_noma": baselines.evaluate_plan(env, prof, p, weights),
+        "ecc_oma": baselines.ecc_oma(env, prof, weights, cfg),
+        "device_only": baselines.device_only(env, prof),
+        "edge_only": baselines.edge_only(env, prof),
+        "neurosurgeon": baselines.neurosurgeon(env, prof),
+        "dnn_surgery": baselines.dnn_surgery(env, prof),
+    }

@@ -1,0 +1,77 @@
+"""Inference-delay + energy models and the weighted utility (paper eqs. 1-22).
+
+All functions are differentiable in the continuous variables (beta, p, r) so
+jax.grad drives the (Li-)GD optimizer; the split index enters through
+precomputed per-split constants (f_l^i, f_e^i, w_s), exactly as the paper
+prescribes ("f_l, f_e, w_s are calculated by mobile users in advance").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel
+from repro.core.types import (
+    Array,
+    EccWeights,
+    GdVars,
+    ModelProfile,
+    NetworkEnv,
+    lam,
+)
+
+
+def split_constants(prof: ModelProfile, s: Array) -> tuple[Array, Array, Array, Array]:
+    """(f_device, f_edge, w_up_bits, m_down_bits) for split index s in 0..F."""
+    pre = prof.prefix_flops()
+    suf = prof.suffix_flops()
+    return pre[s], suf[s], prof.w[s], prof.m_down[s]
+
+
+def delay_energy(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    s: Array,
+    v: GdVars,
+    rates: tuple[Array, Array] | None = None,
+) -> tuple[Array, Array]:
+    """Per-user (T_i, E_i): paper eqs. (12) and (17)."""
+    comp = env.comp
+    f_dev, f_edge, w_up, m_dn = split_constants(prof, s)
+    if rates is None:
+        r_up, r_dn = channel.user_rates(env, v.beta_up, v.beta_dn, v.p_up, v.p_dn)
+    else:
+        r_up, r_dn = rates
+    speed_edge = lam(v.r, comp) * comp.c_min_edge
+
+    t_dev = f_dev / comp.c_device                       # eq. (1)
+    t_edge = f_edge / speed_edge                        # eq. (3)
+    t_up = w_up / r_up                                  # eq. (7)
+    t_dn = m_dn / r_dn                                  # eq. (10)
+    T = t_dev + t_edge + t_up + t_dn                    # eq. (12)
+
+    e_dev = comp.xi_device * comp.c_device**2 * comp.phi_device * f_dev    # eq. (13)
+    e_up = v.p_up * t_up                                                   # eq. (14)
+    e_edge = comp.xi_edge * speed_edge**2 * comp.phi_edge * f_edge         # eq. (16)
+    e_dn = v.p_dn * t_dn                                                   # eq. (15)
+    E = e_dev + e_up + e_edge + e_dn                    # eq. (17)
+    return T, E
+
+
+def utility(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    s: Array,
+    v: GdVars,
+    w: EccWeights,
+) -> Array:
+    """Gamma_s = sum_i omega_T^i T_i + omega_E^i E_i  (paper eq. 22)."""
+    T, E = delay_energy(env, prof, s, v)
+    return jnp.sum(w.w_T * T + w.w_E * E)
+
+
+def per_user_utility(
+    env: NetworkEnv, prof: ModelProfile, s: Array, v: GdVars, w: EccWeights
+) -> Array:
+    T, E = delay_energy(env, prof, s, v)
+    return w.w_T * T + w.w_E * E

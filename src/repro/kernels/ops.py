@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Each wrapper handles padding to block multiples, GQA reshapes, and exposes
+`interpret=` so the CPU container can execute the kernel bodies for
+validation (the compiled Mosaic path needs real TPU hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.noma_rates import noma_pairwise_kernel
+from repro.kernels.rg_lru import rg_lru_kernel
+from repro.core.types import NetworkEnv
+
+LOG2 = 0.6931471805599453
+
+
+def _pad_to(x, mult, axis):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # (B, Sq, H, hd)
+    k: jax.Array,   # (B, Sk, KV, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, sk))
+    qp = _pad_to(qf, bq, 1)
+    kp = _pad_to(kf, bk, 1)
+    vp = _pad_to(vf, bk, 1)
+    out = flash_attention_kernel(
+        qp, kp, vp, group=g, causal=causal, window=window,
+        block_q=bq, block_k=bk, kv_len=sk, interpret=interpret,
+    )[:, :sq]
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
+def noma_uplink_rates(
+    env: NetworkEnv,
+    beta_up: jax.Array,   # (U, M)
+    p_up: jax.Array,      # (U,)
+    interpret: bool = False,
+    block_u: int = 8,
+    block_v: int = 8,
+    block_m: int = 128,
+) -> jax.Array:
+    """Kernel-backed replacement for repro.core.channel.uplink_rates."""
+    own = env.own_gain_up().astype(jnp.float32)
+    tx = (beta_up * p_up[:, None]).astype(jnp.float32)
+    # gain of interferer v at user u's AP: g_up[v, ap[u], m] -> (V, U, M)
+    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
+    same = env.same_cell().astype(jnp.float32)
+    u, m = own.shape
+    bm = min(block_m, m)
+    own_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
+    tx_p = _pad_to(_pad_to(tx, block_u, 0), bm, 1)
+    up = own_p.shape[0]
+    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_u, 0), block_u, 1), bm, 2)
+    same_p = _pad_to(_pad_to(same, block_u, 0), block_u, 1)
+    intra, inter = noma_pairwise_kernel(
+        own_p, own_p, tx_p * own_p, tx_p, g_p, same_p,
+        descending=True, block_u=block_u, block_v=block_v, block_m=bm,
+        interpret=interpret,
+    )
+    intra, inter = intra[:u, :m], inter[:u, :m]
+    sinr = p_up[:, None] * own / (intra + inter + env.noise_up)
+    bw = env.radio.bandwidth_up_hz / env.n_sub
+    return beta_up * bw * jnp.log1p(sinr) / LOG2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b", "block_s", "block_w"))
+def rg_lru(
+    log_a: jax.Array,   # (B, S, W)
+    b: jax.Array,
+    h0: jax.Array | None = None,
+    interpret: bool = False,
+    block_b: int = 8,
+    block_s: int = 256,
+    block_w: int = 128,
+) -> jax.Array:
+    bsz, s, w = log_a.shape
+    bb = min(block_b, bsz)
+    bs = min(block_s, s)
+    bw = min(block_w, w)
+    la = _pad_to(_pad_to(_pad_to(log_a, bb, 0), bs, 1), bw, 2)
+    bp = _pad_to(_pad_to(_pad_to(b, bb, 0), bs, 1), bw, 2)
+    h0p = None
+    if h0 is not None:
+        h0p = _pad_to(_pad_to(h0, bb, 0), bw, 1)
+    out = rg_lru_kernel(la, bp, h0p, block_b=bb, block_s=bs, block_w=bw,
+                        interpret=interpret)
+    return out[:bsz, :s, :w]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+LOG2 = 0.6931471805599453
+
+
+def flash_attention_ref(q, k, v, group: int, causal=True, window=0,
+                        kv_len=None):
+    """q: (B*KV*G, Sq, hd); k/v: (B*KV, Sk, hd). Naive softmax attention."""
+    bhq, sq, hd = q.shape
+    sk = k.shape[1]
+    kv_len = sk if kv_len is None else kv_len
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd**-0.5
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def noma_pairwise_ref(own_u, own_v, w_intra, w_power, g_vu, same_cell,
+                      descending: bool):
+    """Oracle for the NOMA pairwise-interference kernel.
+
+    own_u: (U, M)    own-cell gain of each receiver user per subchannel
+    own_v: (V, M)    own-cell gain of each interferer
+    w_intra: (V, M)  intra-cell contribution of v if selected (beta*p*own_v)
+    w_power: (V, M)  tx power weight of v (beta*p), for the inter-cell term
+    g_vu: (V, U, M)  gain of interferer v at user u's AP
+    same_cell: (U, V) bool
+    descending: True -> uplink SIC (weaker own-gain interferes with me);
+                False -> downlink SIC (stronger own-gain interferes)
+    Returns (intra (U, M), inter (U, M)):
+      intra[u,m] = sum_v same[u,v] * cmp(v,u) * w_intra[v,m]
+      inter[u,m] = sum_v !same[u,v] * w_power[v,m] * g_vu[v,u,m]
+    """
+    if descending:
+        cmp = own_v[None, :, :] < own_u[:, None, :]       # (U, V, M)
+    else:
+        cmp = own_v[None, :, :] > own_u[:, None, :]
+    sc = same_cell[:, :, None]
+    intra = jnp.sum(jnp.where(cmp & sc, w_intra[None, :, :], 0.0), axis=1)
+    inter = jnp.einsum(
+        "uv,vm,vum->um", (~same_cell).astype(w_power.dtype), w_power, g_vu
+    )
+    return intra, inter
+
+
+def rg_lru_ref(log_a, b, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t, via associative scan.
+    log_a, b: (B, S, W) fp32."""
+    a = jnp.exp(log_a)
+    bb = b
+    if h0 is not None:
+        bb = bb.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    return h

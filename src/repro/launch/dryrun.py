@@ -1,0 +1,324 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first init).
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+Per cell this produces, WITHOUT allocating real tensors:
+  * proof the 512-chip multi-pod sharding is coherent (compile succeeds),
+  * memory_analysis(): per-device bytes (does it fit 16 GB HBM of v5e),
+  * cost_analysis()-derived per-device FLOPs / bytes via two reduced-depth
+    UNROLLED probe compiles + exact linear extrapolation in depth
+    (XLA counts lax.scan while-bodies once -- see EXPERIMENTS.md §Dry-run),
+  * the collective schedule (op kinds, shapes, replica groups, trip counts)
+    parsed from the optimized HLO of the full-depth compile.
+
+Usage:
+  python -m repro.launch.dryrun --all [--multi-pod-only/--single-pod-only]
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json (resumable; --force
+recompiles).
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch.hlo_analysis import parse_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.models import attention as attention_mod
+from repro.models import xlstm as xlstm_mod
+from repro.runtime import sharding as shlib
+from repro.runtime.train import init_state, jit_train_step
+from repro.runtime.serve import jit_decode_step, jit_prefill
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+# TPU v5e targets (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def scaled_cfg(cfg, depth: int):
+    kw = dict(n_layers=depth)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = depth
+    return dataclasses.replace(cfg, **kw)
+
+
+def probe_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_every
+    elif cfg.block_pattern:
+        p = len(cfg.block_pattern)
+    else:
+        p = 1
+    base = cfg.first_dense_layers
+    return base + p, base + 2 * p
+
+
+def model_flops_active(cfg, vocab_padded: int) -> tuple[float, float]:
+    """(total_params, active_params_per_token) from the config."""
+    m = Model(cfg)
+    shapes = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    inactive = 0
+    if cfg.n_experts:
+        moe_layers = cfg.n_layers - cfg.first_dense_layers
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        inactive = moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return float(total), float(total - inactive)
+
+
+def _slstm_correction(cfg, batch: int, seq: int) -> tuple[float, float]:
+    """Analytic FLOPs/bytes for the sequential sLSTM time scan (its while
+    body is counted once; trips = seq). Returns (flops, bytes) PER DEVICE
+    assuming batch sharded over the dp axes (conservative: /16)."""
+    if "slstm" not in cfg.block_pattern or seq <= 1:
+        return 0.0, 0.0
+    n_slstm = sum(1 for i in range(cfg.n_layers)
+                  if cfg.block_pattern[i % len(cfg.block_pattern)] == "slstm")
+    h, hd = cfg.n_heads, cfg.hd
+    b_local = max(1, batch // 16)
+    step_flops = 2 * b_local * h * hd * 4 * hd + 24 * b_local * h * hd
+    r_bytes = h * hd * 4 * hd * 4
+    step_bytes = r_bytes + 14 * b_local * h * hd * 4
+    return (seq - 1) * step_flops * n_slstm, (seq - 1) * step_bytes * n_slstm
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, depth=None, unroll=False,
+               opt=False, probe=False):
+    """Build + lower + compile one cell; returns the compiled object.
+    opt=True enables the beyond-paper optimizations (§Perf A-D): flat TP
+    attention layout, flash-decoding cache sharding, ZeRO-1, chunked CE."""
+    cfg = configs.get(arch)
+    if depth is not None:
+        cfg = scaled_cfg(cfg, depth)
+    kind = SHAPES[shape_name]["kind"]
+    seq, batch = SHAPES[shape_name]["seq"], SHAPES[shape_name]["batch"]
+    tp = mesh.shape.get("model", 1) if opt else None
+    model = Model(cfg, remat=True, unroll=unroll, tp_size=tp)
+    specs = model.input_specs(shape_name)
+
+    attention_mod.UNROLL_SCANS = unroll
+    xlstm_mod.UNROLL_SCANS = unroll
+    try:
+        with mesh:
+            if kind == "train":
+                # probes: n_microbatches=1 -- identical per-step math,
+                # but the microbatch scan body would otherwise be counted
+                # once by cost_analysis. FSDP intentionally NOT in the opt
+                # set: GSPMD gathers the full stacked scan weights per layer
+                # step (x L x microbatches collective blowup; see §Perf E).
+                # Microbatching is adaptive (§Perf F2): only archs whose
+                # activations don't fit take the grad-accumulation loop.
+                micro = 8 if (opt and cfg.d_model >= 2048) else 1
+                make, _ = jit_train_step(model, mesh,
+                                         n_microbatches=1 if (probe or not opt)
+                                         else micro,
+                                         zero1=opt, fsdp=False,
+                                         seq_chunk=512 if opt else 0)
+                state_shapes = jax.eval_shape(
+                    lambda: init_state(model, jax.random.PRNGKey(0)))
+                jitted = make(specs)
+                lowered = jitted.lower(state_shapes, specs)
+            elif kind == "prefill":
+                jfn, p_shard = jit_prefill(model, mesh, max_len=seq)
+                params_shapes = jax.eval_shape(
+                    lambda: model.init(jax.random.PRNGKey(0)))
+                lowered = jfn.lower(params_shapes, specs)
+            else:  # decode
+                step, p_shard, c_shard = jit_decode_step(
+                    model, mesh, batch=batch, max_len=seq)
+                params_shapes = jax.eval_shape(
+                    lambda: model.init(jax.random.PRNGKey(0)))
+                lowered = step.lower(params_shapes, specs["caches"],
+                                     specs["token"])
+            compiled = lowered.compile()
+    finally:
+        attention_mod.UNROLL_SCANS = False
+        xlstm_mod.UNROLL_SCANS = False
+    return compiled
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool,
+                 with_probes: bool = True, opt: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = configs.get(arch)
+    seq, batch = SHAPES[shape_name]["seq"], SHAPES[shape_name]["batch"]
+    kind = SHAPES[shape_name]["kind"]
+
+    out: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": kind, "seq": seq, "batch": batch,
+                 "n_devices": mesh.size, "optimized": opt}
+
+    compiled = lower_cell(arch, shape_name, mesh, opt=opt)
+    ma = compiled.memory_analysis()
+    out["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_bytes_est": ma.argument_size_in_bytes + ma.temp_size_in_bytes
+        + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+    }
+    ca = compiled.cost_analysis()
+    out["cost_raw"] = {"flops_body_once": ca.get("flops", 0.0),
+                       "bytes_body_once": ca.get("bytes accessed", 0.0)}
+    hlo = parse_hlo(compiled.as_text())
+    out["hlo_full"] = hlo
+    del compiled
+    gc.collect()
+
+    if with_probes:
+        k1, k2 = probe_depths(cfg)
+        probes = {}
+        for k in (k1, k2):
+            c = lower_cell(arch, shape_name, mesh, depth=k, unroll=True,
+                           opt=opt, probe=True)
+            pca = c.cost_analysis()
+            ph = parse_hlo(c.as_text())
+            probes[k] = {
+                "flops": pca.get("flops", 0.0),
+                "bytes": pca.get("bytes accessed", 0.0),
+                "coll_ring": ph["collective_bytes_ring"],
+                "coll_spec": ph["collective_bytes_spec"],
+            }
+            del c
+            gc.collect()
+        n_full = cfg.n_layers
+        scale = (n_full - k1) / (k2 - k1)
+
+        def extrap(key):
+            return probes[k1][key] + (probes[k2][key] - probes[k1][key]) * scale
+
+        fl = extrap("flops")
+        by = extrap("bytes")
+        cf, cb = (0.0, 0.0)
+        if cfg.name == "xlstm-125m" and kind != "decode":
+            eff_seq = seq if kind != "train" else seq
+            cf, cb = _slstm_correction(cfg, batch, eff_seq)
+        out["probe"] = {
+            "k1": k1, "k2": k2, "points": probes,
+            "flops_per_device": fl + cf,
+            "bytes_per_device": by + cb,
+            # collectives from the FULL compile's trip-aware HLO parse
+            # (captures the microbatch loop); probe extrapolation kept for
+            # cross-checking.
+            "coll_ring_per_device": hlo["collective_bytes_ring"],
+            "coll_spec_per_device": hlo["collective_bytes_spec"],
+            "coll_ring_probe_extrap": extrap("coll_ring"),
+            "slstm_correction": {"flops": cf, "bytes": cb},
+        }
+
+    total_p, active_p = model_flops_active(cfg, Model(cfg).vocab_padded)
+    tokens = batch * (1 if kind == "decode" else
+                      (seq // 4 if cfg.family == "audio" and kind == "train"
+                       else seq))
+    mult = 6.0 if kind == "train" else 2.0
+    out["model_flops_global"] = mult * active_p * tokens
+    out["params_total"] = total_p
+    out["params_active"] = active_p
+    out["elapsed_s"] = round(time.time() - t0, 1)
+    return out
+
+
+def roofline_terms(cell: dict) -> dict:
+    p = cell.get("probe")
+    if not p:
+        return {}
+    compute_t = p["flops_per_device"] / PEAK_FLOPS
+    memory_t = p["bytes_per_device"] / HBM_BW
+    coll_t = p["coll_ring_per_device"] / ICI_BW
+    dom = max(("compute", compute_t), ("memory", memory_t),
+              ("collective", coll_t), key=lambda x: x[1])[0]
+    flops_global = p["flops_per_device"] * cell["n_devices"]
+    return {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dom,
+        "model_vs_hlo_flops": cell["model_flops_global"] / max(flops_global, 1.0),
+        "bound_s": max(compute_t, memory_t, coll_t),
+    }
+
+
+def run_cell(arch, shape, multi_pod, force=False, opt=False):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    art_dir = ART_DIR + ("_opt" if opt else "")
+    os.makedirs(art_dir, exist_ok=True)
+    path = os.path.join(art_dir, f"{arch}__{shape}__{mesh_name}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip] {path} exists")
+        return True
+    ok, why = shape_applicable(configs.get(arch), shape)
+    if not ok:
+        json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "skipped": why}, open(path, "w"), indent=1)
+        print(f"[SKIP] {arch} {shape} {mesh_name}: {why}")
+        return True
+    try:
+        cell = analyze_cell(arch, shape, multi_pod,
+                            with_probes=not multi_pod, opt=opt)
+        if not multi_pod:
+            cell["roofline"] = roofline_terms(cell)
+        json.dump(cell, open(path, "w"), indent=1)
+        mem = cell["memory"]["peak_bytes_est"] / 2**30
+        print(f"[OK] {arch} {shape} {mesh_name}: peak {mem:.2f} GiB/dev, "
+              f"{cell['elapsed_s']}s"
+              + (f", dominant={cell['roofline']['dominant']}"
+                 if not multi_pod else ""))
+        return True
+    except Exception as e:
+        traceback.print_exc()
+        json.dump({"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "error": f"{type(e).__name__}: {e}"},
+                  open(path + ".err", "w"), indent=1)
+        print(f"[FAIL] {arch} {shape} {mesh_name}: {type(e).__name__}: {e}")
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimizations (artifacts to dryrun_opt)")
+    args = ap.parse_args()
+
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    archs = [args.arch] if args.arch else configs.all_names()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if not run_cell(arch, shape, mp, force=args.force,
+                                opt=args.opt):
+                    n_fail += 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Post-SPMD HLO text analysis: collective inventory with while-loop
+trip-count attribution.
+
+XLA's cost_analysis() counts while (lax.scan) bodies ONCE, so both FLOPs and
+collective volumes need trip multiplication. We parse the optimized HLO:
+computations, while ops (body/condition edges), trip counts (the loop-bound
+constant in the condition), and every collective's result shape + replica
+group size. Comm volume per device uses ring formulas:
+
+  all-reduce        2 (g-1)/g * bytes
+  all-gather          (g-1)/g * bytes        (bytes = full gathered output)
+  reduce-scatter      (g-1)   * bytes_out    (input = g * output)
+  all-to-all          (g-1)/g * bytes
+  collective-permute  bytes
+
+`bytes_spec` additionally records the plain sum-of-result-bytes (the
+assignment's "sum operand sizes" definition).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return num_partitions
+
+
+def _ring_bytes(kind: str, bytes_res: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * bytes_res
+    if kind == "all-gather":
+        return (g - 1) / g * bytes_res
+    if kind == "reduce-scatter":
+        return float((g - 1) * bytes_res)
+    if kind == "all-to-all":
+        return (g - 1) / g * bytes_res
+    return float(bytes_res)  # collective-permute
+
+
+def parse_hlo(text: str) -> dict:
+    num_partitions = 1
+    m = re.search(r"num_partitions=(\d+)", text)
+    if m:
+        num_partitions = int(m.group(1))
+
+    # ---- split into computations
+    comps: dict[str, list[str]] = {}
+    current = None
+    entry = None
+    for line in text.splitlines():
+        mm = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if mm and not line.startswith(" "):
+            current = mm.group(2)
+            comps[current] = []
+            if mm.group(1):
+                entry = current
+            continue
+        if current is not None:
+            comps[current].append(line)
+
+    # ---- collectives per computation
+    coll: dict[str, list[tuple[str, int, float, int]]] = defaultdict(list)
+    # ---- while edges per computation: (body, cond)
+    whiles: dict[str, list[tuple[str, str]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            for kind in COLL_KINDS:
+                if re.search(rf"\b{kind}(-start)?\(", line):
+                    seg = line.split("=", 1)
+                    res_seg = seg[1].split(kind)[0] if len(seg) > 1 else line
+                    b = _shape_bytes(res_seg)
+                    # all-reduce results may be tuples: bytes counted once
+                    g = _group_size(line, num_partitions)
+                    coll[name].append((kind, b, _ring_bytes(kind, b, g), g))
+                    break
+            wm = re.search(r"\bwhile\(", line)
+            if wm:
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                if cm and bm:
+                    whiles[name].append((bm.group(1), cm.group(1)))
+            # other computation references (fusion calls) intentionally not
+            # traversed: reductions/fusions hold no collectives in XLA HLO.
+
+    # ---- trip counts from condition computations
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                best = max(best, int(c))
+        return best
+
+    # ---- multiplicity propagation from entry
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        c = frontier.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for body, cond in whiles.get(c, []):
+            mult[body] += mult[c] * trip_count(cond)
+            frontier.append(body)
+
+    # ---- totals
+    per_kind_bytes = defaultdict(float)
+    per_kind_ring = defaultdict(float)
+    per_kind_count = defaultdict(float)
+    schedule = []
+    for name, ops in coll.items():
+        f = mult.get(name, 1.0 if name == entry else 0.0)
+        if f == 0.0 and name != entry:
+            # computation not reached via while edges: treat as entry-level
+            f = 1.0 if name == entry else mult.get(name, 0.0)
+        for kind, b, ring, g in ops:
+            per_kind_bytes[kind] += f * b
+            per_kind_ring[kind] += f * ring
+            per_kind_count[kind] += f
+            schedule.append({"kind": kind, "bytes": b, "group": g,
+                             "mult": f, "comp": name})
+
+    return {
+        "num_partitions": num_partitions,
+        "collective_bytes_spec": float(sum(per_kind_bytes.values())),
+        "collective_bytes_ring": float(sum(per_kind_ring.values())),
+        "per_kind_bytes": dict(per_kind_bytes),
+        "per_kind_count": dict(per_kind_count),
+        "schedule": sorted(schedule, key=lambda s: -s["bytes"] * s["mult"])[:20],
+        "n_whiles": int(sum(len(v) for v in whiles.values())),
+    }

@@ -1,0 +1,91 @@
+"""Roofline report generator: reads artifacts/dryrun/*.json, emits the
+per-(arch x shape) three-term table as markdown (for EXPERIMENTS.md).
+
+  compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s   (bf16, v5e)
+  memory_s     = HLO_bytes_per_device / 819 GB/s
+  collective_s = ring collective bytes_per_device / 50 GB/s ICI
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def load_cells(mesh="pod16x16", suffix=""):
+    cells = []
+    d = ART_DIR + suffix
+    for p in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        cells.append(json.load(open(p)))
+    return cells
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells, only_dominant=None):
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "MODEL/HLO | peak GiB/dev |")
+    sep = "|" + "---|" * 8
+    rows = [hdr, sep]
+    for c in cells:
+        if c.get("skipped"):
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | "
+                f"{c['skipped']} | — | — |")
+            continue
+        r = c.get("roofline", {})
+        if not r:
+            continue
+        if only_dominant and r["dominant"] != only_dominant:
+            continue
+        mem = c["memory"]["peak_bytes_est"] / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['model_vs_hlo_flops']:.2f} | "
+            f"{mem:.2f} |")
+    return "\n".join(rows)
+
+
+def summary(cells):
+    live = [c for c in cells if c.get("roofline")]
+    worst = sorted(live, key=lambda c: -c["roofline"]["bound_s"])
+    coll = sorted(live, key=lambda c: -c["roofline"]["collective_s"])
+    lines = ["", "Worst bound cells:"]
+    for c in worst[:5]:
+        r = c["roofline"]
+        lines.append(f"  {c['arch']} {c['shape']}: bound {fmt_s(r['bound_s'])}"
+                     f" ({r['dominant']})")
+    lines.append("Most collective-bound cells:")
+    for c in coll[:5]:
+        r = c["roofline"]
+        lines.append(f"  {c['arch']} {c['shape']}: coll {fmt_s(r['collective_s'])}"
+                     f" vs bound {fmt_s(r['bound_s'])}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--suffix", default="_opt",
+                    help="artifact dir suffix: _opt | _baseline | ''")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh, args.suffix)
+    print(table(cells))
+    print(summary(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.model import Model  # noqa: F401
+from repro.models.blocks import StageSpec, stages_for  # noqa: F401

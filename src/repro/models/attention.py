@@ -1,0 +1,256 @@
+"""Attention: GQA with RoPE, memory-bounded 'flash-style' jnp core.
+
+The core scans over KV chunks with an online-softmax accumulator, so peak
+memory is O(Sq * chunk) instead of O(Sq * Sk) -- naive S^2 scores cannot
+even be allocated at 32k context. On real TPU hardware the Pallas kernel
+(repro.kernels.flash_attention) replaces this core; the jnp path is the
+oracle + the dry-run path (Pallas does not lower on the CPU host platform).
+
+Supports: causal / bidirectional / local-window masks, cross attention,
+KV caches for decode, grouped KV without materializing repeated heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, Array, ParamDef, rope
+from repro.pshard import constrain
+
+NEG_INF = -1e30
+
+# Set True during dry-run probe lowering: unrolls the KV-chunk scan so
+# XLA cost analysis sees every chunk (while bodies are otherwise counted once).
+UNROLL_SCANS = False
+
+
+def attn_defs(cfg, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    hq = cfg.heads_padded or h  # flat layout pads H to a tp multiple
+    defs = {
+        "wq": ParamDef((d, hq * hd), ("embed", "qkv")),
+        "wk": ParamDef((d, kv * hd), ("embed", "kv")),
+        "wv": ParamDef((d, kv * hd), ("embed", "kv")),
+        "wo": ParamDef((hq * hd, d), ("qkv", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((hq * hd,), ("qkv",), init="zeros")
+        defs["bk"] = ParamDef((kv * hd,), ("kv",), init="zeros")
+        defs["bv"] = ParamDef((kv * hd,), ("kv",), init="zeros")
+    return defs
+
+
+def _chunked_mha(
+    q: Array,            # (B, Sq, KV, G, hd)  -- grouped query
+    k: Array,            # (B, Sk, KV, hd)
+    v: Array,            # (B, Sk, KV, hd)
+    q_pos: Array,        # (B, Sq) absolute positions of queries
+    k_pos: Array,        # (B, Sk) absolute positions of keys
+    kv_valid_len: Array | None,  # (B,) or None: #valid cache entries
+    causal: bool,
+    window: int,
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax attention, scanning KV in chunks. For tiny Sq (decode)
+    a single-pass path is used instead: no scan, so a sequence-sharded KV
+    cache keeps the score/AV contractions local per shard with only small
+    reductions crossing shards (flash-decoding / split-K; §Perf iteration)."""
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    qf = (q * scale).astype(COMPUTE_DTYPE)
+    if sq <= 8:
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, k).astype(jnp.float32)
+        valid = k_pos[:, None, None, None, :] >= 0
+        if causal:
+            valid &= k_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window:
+            valid &= (q_pos[:, None, None, :, None]
+                      - k_pos[:, None, None, None, :]) < window
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(COMPUTE_DTYPE), v)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(COMPUTE_DTYPE)
+    chunk = min(chunk, sk)
+    n_chunks = (sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd)
+    pc = k_pos.reshape(b, n_chunks, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp  # (b, chunk, kvh, hd), ..., (b, chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb).astype(jnp.float32)
+        valid = pb[:, None, None, None, :] >= 0
+        if kv_valid_len is not None:
+            valid &= pb[:, None, None, None, :] < kv_valid_len[:, None, None, None, None]
+        if causal:
+            valid &= pb[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window:
+            valid &= q_pos[:, None, None, :, None] - pb[:, None, None, None, :] < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(COMPUTE_DTYPE), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)),
+        unroll=True if UNROLL_SCANS else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (b, kvh, g, sq, hd) -> (b, sq, kvh, g, hd)
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(COMPUTE_DTYPE)
+
+
+def attn_apply(
+    p: dict,
+    x: Array,                 # (B, S, D)
+    cfg,
+    q_pos: Array,             # (B, S)
+    kv_src: Array | None = None,   # cross-attention source (B, Sk, D)
+    cache: dict | None = None,     # {"k","v": (B, Smax, KV, hd), "len": (B,)}
+    causal: bool = True,
+    window: int = 0,
+    rope_theta: float | None = None,
+) -> tuple[Array, dict | None]:
+    """Returns (out, updated_cache).
+
+    Two TP layouts (chosen by Model via cfg.attn_layout):
+      grouped  q stays (B,S,KV,G,hd): KV heads shard over 'model' when
+               kv % tp == 0 (the GQA-natural layout).
+      flat     q is (B,S,Hp,1,hd) with Hp = H padded to a tp multiple and
+               K/V logically repeated per query head: shards attention
+               compute/score memory tp-ways even when neither kv nor H
+               divides tp (padded heads have zero wq/wo -> exact math).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    flat = cfg.attn_layout == "flat"
+    hq = (cfg.heads_padded or h) if flat else h
+    dt = COMPUTE_DTYPE
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+
+    q = x @ p["wq"].astype(dt)
+    src = x if kv_src is None else kv_src
+    kproj = src @ p["wk"].astype(dt)
+    vproj = src @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        kproj = kproj + p["bk"].astype(dt)
+        vproj = vproj + p["bv"].astype(dt)
+    kproj = kproj.reshape(b, -1, kv, hd)
+    vproj = vproj.reshape(b, -1, kv, hd)
+
+    if kv_src is None:
+        q = rope(q.reshape(b, s, hq, hd), q_pos, theta)
+        k_pos_new = q_pos
+        kproj = rope(kproj, k_pos_new, theta)
+    else:
+        q = q.reshape(b, s, hq, hd)
+        k_pos_new = jnp.broadcast_to(
+            jnp.arange(kproj.shape[1], dtype=jnp.int32)[None], kproj.shape[:2]
+        )
+
+    if flat:
+        # repeat KV per (padded) query head; padded heads clamp to the last
+        # real KV head (their zero wo rows erase the result anyway)
+        head_map = jnp.clip(jnp.arange(hq) // g, 0, kv - 1)
+        q = constrain(q, ("batch", None, "heads", None))[:, :, :, None, :]
+        expand = lambda t: constrain(t[:, :, head_map, :],
+                                     ("batch", None, "heads", None))
+    else:
+        q = q.reshape(b, s, kv, g, hd)
+        q = constrain(q, ("batch", None, "kv_heads", None, None))
+        expand = lambda t: t
+
+    new_cache = None
+    if cache is not None:
+        # Ring-buffer cache: write at len % size; absolute positions stored in
+        # cache["pos"] drive masking (-1 marks empty slots), so local-window
+        # caches of size `window` work at any context length.
+        size = cache["k"].shape[1]
+        if s > 1:
+            # prefill: attend over the full fresh K/V (early queries need
+            # keys the window-sized cache won't retain) ...
+            out = _chunked_mha(q, expand(kproj), expand(vproj), q_pos,
+                               k_pos_new, None, causal=causal, window=window)
+            # ... the cache keeps the last `size` tokens, rolled so position
+            # p lands at slot p % size (the decode ring invariant).
+            if s >= size:
+                shift = (s - size) % size
+                k_all = jnp.roll(kproj[:, -size:].astype(dt), shift, axis=1)
+                v_all = jnp.roll(vproj[:, -size:].astype(dt), shift, axis=1)
+                pos_all = jnp.roll(q_pos[:, -size:], shift, axis=1)
+            else:
+                k_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], kproj.astype(dt), 0, 1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], vproj.astype(dt), 0, 1)
+                pos_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["pos"], q_pos, 0, 1)
+        else:
+            # decode: ring-buffer write, attend over the cache. ALWAYS the
+            # grouped layout here (no KV repeat): with a sequence-sharded
+            # cache the score/AV contractions are shard-local flash-decoding
+            # and repeating KV G-fold would only inflate HBM traffic.
+            slot = cache["len"][0] % size  # uniform across batch
+            k_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kproj.astype(dt), slot, 1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vproj.astype(dt), slot, 1)
+            pos_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], q_pos, slot, 1)
+            q_g = (q[:, :, :h, 0] if flat else q.reshape(b, s, h, hd))
+            q_g = q_g.reshape(b, s, kv, g, hd)
+            out = _chunked_mha(q_g, k_all, v_all, q_pos, pos_all, None,
+                               causal=causal, window=window)
+            out = out.reshape(b, s, h, hd)
+            if flat and hq != h:
+                out = jnp.pad(out, ((0, 0), (0, 0), (0, hq - h), (0, 0)))
+            out = out.reshape(b, s, hq * hd)
+            new_cache = {"k": k_all, "v": v_all, "pos": pos_all,
+                         "len": cache["len"] + s}
+            return out @ p["wo"].astype(dt), new_cache
+        new_cache = {"k": k_all, "v": v_all, "pos": pos_all,
+                     "len": cache["len"] + s}
+    else:
+        out = _chunked_mha(q, expand(kproj), expand(vproj), q_pos, k_pos_new,
+                           None, causal=causal, window=window)
+
+    if flat and hq != h:
+        # zero the padded heads: their random-init wq/wo must not leak
+        mask = (jnp.arange(hq) < h).astype(out.dtype)
+        out = out * mask[None, None, :, None, None]
+    out = out.reshape(b, s, hq * hd)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def make_cache(cfg, batch: int, max_len: int, n_layers: int,
+               window: int = 0) -> dict:
+    """Stacked (over layers) KV cache for one attention stage."""
+    size = min(window, max_len) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, batch, size, kv, hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((n_layers, batch, size, kv, hd), COMPUTE_DTYPE),
+        "pos": jnp.full((n_layers, batch, size), -1, jnp.int32),
+        "len": jnp.zeros((n_layers, batch), jnp.int32),
+    }

@@ -1,0 +1,270 @@
+"""Model assembly: stages -> init / train-forward / prefill / decode.
+
+Per-stage parameters are stacked over the stage's layers and the stage body
+is a lax.scan (never unrolled: keeps HLO size independent of depth, which
+matters when compiling 512-device GSPMD programs on a 1-core host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES
+from repro.models import attention, blocks, recurrent, xlstm
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    ParamDef,
+    embed_lookup,
+    init_params,
+    logits_out,
+    pad_vocab,
+    param_specs,
+    rms_norm,
+    layer_norm,
+)
+
+
+def _sinusoid(pos: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = pos[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(COMPUTE_DTYPE)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, remat: bool = True,
+                 moe_impl: str = "sorted", moe_capacity: float = 1.25,
+                 unroll: bool = False, tp_size: int | None = None):
+        if tp_size and cfg.family != "ssm" and cfg.n_kv_heads % tp_size != 0:
+            # flat TP attention layout: pad H to a tp multiple and shard the
+            # flattened query heads (see attention.attn_apply; §Perf A)
+            hp = -(-cfg.n_heads // tp_size) * tp_size
+            cfg = dataclasses.replace(cfg, attn_layout="flat", heads_padded=hp)
+        self.cfg = cfg
+        self.stages = blocks.stages_for(cfg)
+        self.vocab_padded = pad_vocab(cfg.vocab_size)
+        self.remat = remat
+        self.moe_impl = moe_impl
+        self.moe_capacity = moe_capacity
+        self.unroll = unroll  # dry-run probes: unroll stage scans
+
+    # ---------------- params ----------------
+    def _top_defs(self) -> dict:
+        cfg = self.cfg
+        d = {
+            "embed": ParamDef((self.vocab_padded, cfg.d_model), ("vocab", "embed")),
+            "unembed": ParamDef((self.vocab_padded, cfg.d_model), ("vocab", "embed")),
+            "final_norm_w": ParamDef((cfg.d_model,), ("embed",),
+                                     init="zeros" if cfg.family != "audio" else "ones"),
+        }
+        if cfg.family == "audio":
+            d["final_norm_b"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+        return d
+
+    def init(self, key: jax.Array) -> dict:
+        keys = jax.random.split(key, len(self.stages) + 1)
+        params = init_params(self._top_defs(), keys[0])
+        params["stages"] = [
+            init_params(blocks.block_defs(self.cfg, s), k, n_stack=s.n_layers)
+            for s, k in zip(self.stages, keys[1:])
+        ]
+        return params
+
+    def specs(self) -> dict:
+        specs = param_specs(self._top_defs())
+        specs["stages"] = [
+            param_specs(blocks.block_defs(self.cfg, s), stacked=True)
+            for s in self.stages
+        ]
+        return specs
+
+    # ---------------- stage runner ----------------
+    def _run_stage(self, spec, p_stacked, x, aux, cache_stacked):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            xc, aux_sum = carry
+            p_l, cache_l = xs
+            xc, new_cache, al = blocks.block_apply(cfg, spec, p_l, xc, aux, cache_l)
+            return (xc, aux_sum + al), new_cache
+
+        if self.remat and cache_stacked is None:
+            body = jax.checkpoint(body, prevent_cse=False)
+
+        unroll = True if self.unroll else 1
+        if cache_stacked is None:
+            (x, aux_sum), _ = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), (p_stacked, None),
+                unroll=unroll,
+            )
+            return x, None, aux_sum
+        (x, aux_sum), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (p_stacked, cache_stacked),
+            unroll=unroll,
+        )
+        return x, new_cache, aux_sum
+
+    # ---------------- forward paths ----------------
+    def _final_norm(self, params, x):
+        if self.cfg.family == "audio":
+            return layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                              self.cfg.norm_eps)
+        return rms_norm(x, params["final_norm_w"], self.cfg.norm_eps)
+
+    def _encode(self, params, frontend, caches=None):
+        """Audio encoder pass (stage 0). Returns enc_out (B, F, D)."""
+        cfg = self.cfg
+        b, f, _ = frontend.shape
+        pos = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[None], (b, f))
+        x = frontend.astype(COMPUTE_DTYPE) + _sinusoid(pos, cfg.d_model)
+        aux = {"pos": pos, "frontend": None, "moe_impl": self.moe_impl,
+               "moe_capacity": self.moe_capacity}
+        x, _, _ = self._run_stage(self.stages[0], params["stages"][0], x, aux, None)
+        return x
+
+    def forward(self, params, tokens, frontend=None, caches=None,
+                positions=None, return_hidden=False):
+        """Generic forward. tokens: (B, S) int32. Returns
+        (logits fp32 (B,S,Vp) -- or hidden (B,S,D) -- , new_caches, aux)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+        x = embed_lookup(params["embed"], tokens)
+        if cfg.family == "audio":
+            x = x + _sinusoid(positions, cfg.d_model)
+            if caches is not None and caches.get("enc_out") is not None and frontend is None:
+                enc_out = caches["enc_out"]
+            else:
+                enc_out = self._encode(params, frontend)
+                if caches is not None:
+                    caches = dict(caches, enc_out=enc_out)
+            frontend_for_blocks = enc_out
+            stage_list = self.stages[1:]
+            stage_params = params["stages"][1:]
+        else:
+            if caches is not None and frontend is None:
+                frontend_for_blocks = caches.get("frontend")
+            else:
+                frontend_for_blocks = (
+                    frontend.astype(COMPUTE_DTYPE) if frontend is not None else None
+                )
+                if caches is not None and frontend_for_blocks is not None:
+                    caches = dict(caches, frontend=frontend_for_blocks)
+            stage_list = self.stages
+            stage_params = params["stages"]
+
+        aux = {"pos": positions, "frontend": frontend_for_blocks,
+               "moe_impl": self.moe_impl, "moe_capacity": self.moe_capacity}
+        aux_total = jnp.zeros((), jnp.float32)
+        new_stage_caches = []
+        stage_caches = caches["stages"] if caches is not None else [None] * len(stage_list)
+        if cfg.family == "audio" and caches is not None:
+            stage_caches = stage_caches[1:]  # encoder stage holds no cache slot
+        for spec, p_st, c_st in zip(stage_list, stage_params, stage_caches):
+            x, new_c, al = self._run_stage(spec, p_st, x, aux, c_st)
+            aux_total = aux_total + al
+            new_stage_caches.append(new_c)
+
+        x = self._final_norm(params, x)
+        logits = (x if return_hidden
+                  else logits_out(x, params["unembed"], cfg.vocab_size))
+        new_caches = None
+        if caches is not None:
+            all_stages = ([None] + new_stage_caches
+                          if cfg.family == "audio" else new_stage_caches)
+            new_caches = dict(caches, stages=all_stages,
+                              pos=caches["pos"] + s)
+        return logits, new_caches, aux_total
+
+    # ---------------- public APIs ----------------
+    def train_logits(self, params, batch):
+        return self.forward(params, batch["tokens"], batch.get("frontend"))
+
+    def train_hidden(self, params, batch):
+        """Final-norm'd hidden states (B, S, D) + aux loss -- used by the
+        chunked cross-entropy (never materializes (B, S, V) logits)."""
+        h, _, aux = self.forward(params, batch["tokens"],
+                                 batch.get("frontend"), return_hidden=True)
+        return h, aux
+
+    def prefill(self, params, batch, max_len: int):
+        caches = self.make_caches(batch["tokens"].shape[0], max_len)
+        logits, caches, _ = self.forward(
+            params, batch["tokens"], batch.get("frontend"), caches=caches
+        )
+        return logits[:, -1], caches
+
+    def decode_step(self, params, caches, token):
+        """token: (B, 1). One step with KV/state caches."""
+        b = token.shape[0]
+        pos = jnp.broadcast_to(caches["pos"][:, None], (b, 1))
+        logits, caches, _ = self.forward(params, token, caches=caches,
+                                         positions=pos)
+        return logits[:, -1], caches
+
+    # ---------------- caches / input specs ----------------
+    def make_caches(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        stage_caches: list = []
+        for spec in self.stages:
+            if spec.cache == "kv":
+                stage_caches.append(
+                    {"kv": attention.make_cache(cfg, batch, max_len,
+                                                spec.n_layers, spec.window)}
+                )
+            elif spec.cache == "rglru":
+                stage_caches.append(
+                    {"rglru": recurrent.make_rglru_state(cfg, batch, spec.n_layers)}
+                )
+            elif spec.cache == "mlstm":
+                st = xlstm.make_xlstm_state(cfg, batch, spec.n_layers, 0)["mlstm"]
+                stage_caches.append({"mlstm": st})
+            elif spec.cache == "slstm":
+                st = xlstm.make_xlstm_state(cfg, batch, 0, spec.n_layers)["slstm"]
+                stage_caches.append({"slstm": st})
+            else:
+                stage_caches.append(None)
+        out = {"stages": stage_caches, "pos": jnp.zeros((batch,), jnp.int32)}
+        if cfg.family == "audio":
+            out["enc_out"] = jnp.zeros(
+                (batch, cfg.frontend_tokens, cfg.d_model), COMPUTE_DTYPE)
+        if cfg.family == "vlm":
+            out["frontend"] = jnp.zeros(
+                (batch, cfg.frontend_tokens, cfg.d_model), COMPUTE_DTYPE)
+        return out
+
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        cfg = self.cfg
+        sh = SHAPES[shape_name]
+        seq, batch, kind = sh["seq"], sh["batch"], sh["kind"]
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+        if kind == "train":
+            dec_seq = seq // 4 if cfg.family == "audio" else seq
+            spec = {"tokens": sds((batch, dec_seq), i32),
+                    "targets": sds((batch, dec_seq), i32)}
+            if cfg.family == "audio":
+                spec["frontend"] = sds((batch, seq, cfg.d_model), COMPUTE_DTYPE)
+            if cfg.family == "vlm":
+                spec["frontend"] = sds((batch, cfg.frontend_tokens, cfg.d_model),
+                                       COMPUTE_DTYPE)
+            return spec
+        if kind == "prefill":
+            spec = {"tokens": sds((batch, seq), i32)}
+            if cfg.family == "audio":
+                spec["frontend"] = sds((batch, cfg.frontend_tokens, cfg.d_model),
+                                       COMPUTE_DTYPE)
+            if cfg.family == "vlm":
+                spec["frontend"] = sds((batch, cfg.frontend_tokens, cfg.d_model),
+                                       COMPUTE_DTYPE)
+            return spec
+        # decode: one new token against a seq-length cache
+        caches = jax.eval_shape(lambda: self.make_caches(batch, seq))
+        return {"token": sds((batch, 1), i32), "caches": caches}

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer: top-k routing with shared experts.
+
+Two implementations, selectable via `impl`:
+
+  * "sorted" (default): sort-based token dispatch -- token slots are sorted
+    by expert id, scattered into a capacity-bounded (E, C, D) buffer, run
+    through batched expert matmuls, and combined by scatter-add. Only real
+    FLOPs are the expert matmuls (gathers/scatters are data movement), so
+    HLO FLOPs track active-expert MODEL_FLOPS.
+  * "dense": every expert runs on every token, combined with routing probs.
+    Trivially shardable and numerically identical, but E/k x the FLOPs --
+    kept as the oracle for tests and as a fallback.
+
+Router z-loss and load-balance aux loss are returned for the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, Array, ParamDef
+
+
+def moe_defs(cfg) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    defs = {
+        "router": ParamDef((d, e), ("embed", "experts_row")),
+        "w1": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "w3": ParamDef((e, d, f), ("experts", "embed", "mlp")),
+        "w2": ParamDef((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        defs["sw1"] = ParamDef((d, fs), ("embed", "mlp"))
+        defs["sw3"] = ParamDef((d, fs), ("embed", "mlp"))
+        defs["sw2"] = ParamDef((fs, d), ("mlp", "embed"))
+    return defs
+
+
+def _router(p: dict, xt: Array, cfg) -> tuple[Array, Array, Array]:
+    """Returns (gates (N,k), idx (N,k), aux_loss ())."""
+    logits = (xt @ p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss + router z-loss
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=1), axis=0
+    )
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, idx, lb + 1e-3 * z
+
+
+def _experts_sorted(p: dict, xt: Array, gates: Array, idx: Array, cfg,
+                    capacity_factor: float = 1.25) -> Array:
+    n, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    nk = n * k
+    cap = int((nk / e) * capacity_factor + 0.5)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    flat_e = idx.reshape(nk)                        # expert of each slot
+    order = jnp.argsort(flat_e)                     # stable sort by expert
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(nk) - starts[sorted_e]        # position within expert
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_e * cap + rank, e * cap)  # OOB -> dropped
+    tok = order // k                                # source token per slot
+
+    buf = jnp.zeros((e * cap, d), COMPUTE_DTYPE)
+    buf = buf.at[dest].set(xt[tok], mode="drop")
+    h = buf.reshape(e, cap, d)
+    dt = COMPUTE_DTYPE
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w1"].astype(dt)))
+    hidden = hidden * jnp.einsum("ecd,edf->ecf", h, p["w3"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", hidden, p["w2"].astype(dt))
+    out_flat = out.reshape(e * cap, d)
+
+    gate_slot = gates.reshape(nk)[order].astype(dt)  # aligned with sorted slots
+    contrib = out_flat[jnp.where(keep, dest, 0)] * jnp.where(keep, gate_slot, 0.0)[:, None]
+    y = jnp.zeros((n, d), dt).at[tok].add(contrib, mode="drop")
+    return y
+
+
+def _experts_dense(p: dict, xt: Array, gates: Array, idx: Array, cfg) -> Array:
+    e = cfg.n_experts
+    dt = COMPUTE_DTYPE
+    # combine weights (N, E): sum of gate over the slots routed to e
+    comb = jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32) * gates[..., None], axis=1)
+    hidden = jax.nn.silu(jnp.einsum("nd,edf->enf", xt, p["w1"].astype(dt)))
+    hidden = hidden * jnp.einsum("nd,edf->enf", xt, p["w3"].astype(dt))
+    out = jnp.einsum("enf,efd->end", hidden, p["w2"].astype(dt))
+    return jnp.einsum("end,ne->nd", out, comb.astype(dt))
+
+
+def moe_apply(p: dict, x: Array, cfg, impl: str = "sorted",
+              capacity_factor: float = 1.25) -> tuple[Array, Array]:
+    """x: (B, S, D). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    gates, idx, aux = _router(p, xt, cfg)
+    if impl == "sorted":
+        y = _experts_sorted(p, xt, gates, idx, cfg, capacity_factor)
+    else:
+        y = _experts_dense(p, xt, gates, idx, cfg)
+    if cfg.n_shared_experts:
+        dt = COMPUTE_DTYPE
+        h = jax.nn.silu(xt @ p["sw1"].astype(dt)) * (xt @ p["sw3"].astype(dt))
+        y = y + h @ p["sw2"].astype(dt)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [W_gate -> GeLU] branch (gate)
+        x -> [W_x -> causal depthwise conv(w=4) -> RG-LRU] branch
+        out = W_out (gate * lru_out)
+
+RG-LRU per channel:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan (O(log S) depth, sub-quadratic in S,
+which is what qualifies recurrentgemma for the long_500k cell); decode is a
+single fused state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, Array, ParamDef
+
+C_EXP = 8.0
+
+
+def rglru_defs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_dim or d
+    return {
+        "w_in": ParamDef((d, w), ("embed", "lru")),
+        "w_gate": ParamDef((d, w), ("embed", "lru")),
+        "conv_w": ParamDef((cfg.conv_width, w), (None, "lru"), scale=0.1),
+        "conv_b": ParamDef((w,), ("lru",), init="zeros"),
+        "w_r": ParamDef((w, w), ("lru", "lru_out")),
+        "w_i": ParamDef((w, w), ("lru", "lru_out")),
+        "lam": ParamDef((w,), ("lru",), init="ones"),
+        "w_out": ParamDef((w, d), ("lru", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None):
+    """Depthwise causal conv, width K. x: (B, S, W). state: (B, K-1, W)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, W)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out + b.astype(x.dtype), new_state
+
+
+def _rglru_scan(xb: Array, log_a: Array, h0: Array | None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over S.
+    xb: (B, S, W) effective input b_t; log_a: (B, S, W)."""
+    a = jnp.exp(log_a)
+    b = xb
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh
+
+
+def rglru_apply(p: dict, x: Array, cfg, state: dict | None = None
+                ) -> tuple[Array, dict | None]:
+    """x: (B, S, D). state: {"h": (B, W), "conv": (B, K-1, W)} or None."""
+    dt = COMPUTE_DTYPE
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_in"].astype(dt)
+    u, conv_state = _causal_conv(
+        u, p["conv_w"], p["conv_b"], None if state is None else state["conv"]
+    )
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -C_EXP * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    b = scale * (i * uf)
+    if state is None:
+        h = _rglru_scan(b, log_a, None)
+        new_state = None
+    else:
+        h0 = state["h"].astype(jnp.float32)
+        if x.shape[1] == 1:  # decode fast path
+            h = jnp.exp(log_a[:, 0]) * h0 + b[:, 0]
+            h = h[:, None, :]
+        else:
+            h = _rglru_scan(b, log_a, h0)
+        new_state = {"h": h[:, -1, :].astype(jnp.float32), "conv": conv_state}
+    out = (gate * h.astype(dt)) @ p["w_out"].astype(dt)
+    return out, new_state
+
+
+def make_rglru_state(cfg, batch: int, n_layers: int) -> dict:
+    w = cfg.rglru_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_width - 1, w), COMPUTE_DTYPE),
+    }

@@ -1,0 +1,210 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) in pre-norm residual blocks.
+
+mLSTM: per head, state C_t = f_t C_{t-1} + i_t v_t k_t^T, n_t = f_t n_{t-1}
++ i_t k_t, out h_t = (C_t q_t) / max(|n_t . q_t|, 1). Implemented CHUNKWISE:
+intra-chunk quadratic + inter-chunk state scan => O(S * chunk) work, which
+is what qualifies xlstm for the long_500k cell. Gates use exp(i) / sig(f)
+with a running log-stabilizer folded into the chunk decays (we use
+log-sigmoid forget + clipped log-input gates, computed in fp32).
+
+sLSTM: per head scalar-memory LSTM with exponential input gating and a
+block-diagonal recurrent matrix; inherently sequential -> lax.scan over S.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, Array, ParamDef
+
+CHUNK = 256
+
+# Dry-run probe flag (see attention.UNROLL_SCANS). The sLSTM *time* scan is
+# never unrolled (S steps); its FLOPs are corrected analytically in dryrun.
+UNROLL_SCANS = False
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def mlstm_defs(cfg) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, h * hd), ("embed", "qkv")),
+        "wk": ParamDef((d, h * hd), ("embed", "qkv")),
+        "wv": ParamDef((d, h * hd), ("embed", "qkv")),
+        "wi": ParamDef((d, h), ("embed", "heads")),
+        "wf": ParamDef((d, h), ("embed", "heads")),
+        "wo_gate": ParamDef((d, h * hd), ("embed", "qkv")),
+        "wo": ParamDef((h * hd, d), ("qkv", "embed")),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, state):
+    """q,k,v: (B, H, S, hd); log_f, log_i: (B, H, S) fp32.
+    state: (C0 (B,H,hd,hd), n0 (B,H,hd)) or None. Returns (out, state)."""
+    b, h, s, hd = q.shape
+    c = min(CHUNK, s)
+    nc = s // c
+    assert s % c == 0, f"seq {s} must divide chunk {c}"
+    qc = q.reshape(b, h, nc, c, hd)
+    kc = k.reshape(b, h, nc, c, hd)
+    vc = v.reshape(b, h, nc, c, hd)
+    lf = log_f.reshape(b, h, nc, c).astype(jnp.float32)
+    li = log_i.reshape(b, h, nc, c).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+    else:
+        c0, n0 = state
+
+    def step(carry, inp):
+        C, n = carry
+        qb, kb, vb, lfb, lib = inp  # (b,h,c,hd) ... (b,h,c)
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qb, kb, vb))
+        cum = jnp.cumsum(lfb, axis=-1)                  # (b,h,c) inclusive
+        tot = cum[..., -1:]
+        # intra-chunk: D[i,j] = exp(cum_i - cum_j + li_j) for i >= j
+        dmat = cum[..., :, None] - cum[..., None, :] + lib[..., None, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(mask, dmat, -jnp.inf)
+        scores = jnp.einsum("bhid,bhjd->bhij", qf, kf) * (hd ** -0.5)
+        w = scores * jnp.exp(dmat)
+        intra = jnp.einsum("bhij,bhjd->bhid", w, vf)
+        # inter-chunk: decayed initial state
+        dec_q = jnp.exp(cum)[..., None]                 # (b,h,c,1)
+        inter = jnp.einsum("bhid,bhde->bhie", qf * dec_q, C) * (hd ** -0.5)
+        # normalizer q . n_t, split the same way (intra = row-sum of w)
+        n_inter = jnp.einsum("bhid,bhd->bhi", qf * dec_q, n) * (hd ** -0.5)
+        n_intra_q = jnp.sum(w, axis=-1)
+        num = intra + inter
+        den = jnp.maximum(jnp.abs(n_inter + n_intra_q), 1.0)[..., None]
+        out = num / den
+        # state update: C' = exp(tot) C + sum_j exp(tot - cum_j + li_j) k_j v_j^T
+        decay_j = jnp.exp(tot - cum + lib)[..., None]   # (b,h,c,1)
+        Cn = jnp.exp(tot)[..., None] * C + jnp.einsum(
+            "bhjd,bhje->bhde", kf * decay_j, vf
+        )
+        nn = jnp.exp(tot[..., 0])[..., None] * n + jnp.sum(kf * decay_j, axis=2)
+        return (Cn, nn), out
+
+    (cN, nN), outs = jax.lax.scan(
+        step, (c0, n0),
+        (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0),
+         jnp.moveaxis(lf, 2, 0), jnp.moveaxis(li, 2, 0)),
+        unroll=True if UNROLL_SCANS else 1,
+    )
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, hd)
+    return out, (cN, nN)
+
+
+def mlstm_apply(p: dict, x: Array, cfg, state: dict | None = None
+                ) -> tuple[Array, dict | None]:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    dt = COMPUTE_DTYPE
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    xf = x.astype(jnp.float32)
+    log_i = jnp.clip(xf @ p["wi"].astype(jnp.float32), -10.0, 5.0).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(xf @ p["wf"].astype(jnp.float32) + 3.0).transpose(0, 2, 1)
+
+    if state is not None and s == 1:
+        # decode: single recurrent update
+        C, n = state["C"], state["n"]
+        f = jnp.exp(log_f[..., 0])[..., None, None]
+        i = jnp.exp(log_i[..., 0])[..., None, None]
+        kk = k[:, :, 0].astype(jnp.float32)
+        vv = v[:, :, 0].astype(jnp.float32)
+        Cn = f * C + i * jnp.einsum("bhd,bhe->bhde", kk, vv)
+        nn = f[..., 0] * n + i[..., 0] * kk
+        qq = q[:, :, 0].astype(jnp.float32) * (hd ** -0.5)
+        num = jnp.einsum("bhd,bhde->bhe", qq, Cn)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qq, nn)), 1.0)
+        out = (num / den[..., None])[:, :, None, :]
+        new_state = {"C": Cn, "n": nn}
+    else:
+        st = None if state is None else (state["C"], state["n"])
+        out, (cN, nN) = _mlstm_chunk_scan(q, k, v, log_f, log_i, st)
+        new_state = None if state is None else {"C": cN, "n": nN}
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd).astype(dt)
+    gate = jax.nn.silu(x @ p["wo_gate"].astype(dt))
+    return (out * gate) @ p["wo"].astype(dt), new_state
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def slstm_defs(cfg) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    return {
+        "w_zifo": ParamDef((d, 4 * h * hd), ("embed", "qkv")),
+        "r_zifo": ParamDef((h, hd, 4 * hd), ("heads", None, None), scale=0.05),
+        "b_zifo": ParamDef((4 * h * hd,), ("qkv",), init="zeros"),
+        "w_out": ParamDef((h * hd, d), ("qkv", "embed")),
+    }
+
+
+def slstm_apply(p: dict, x: Array, cfg, state: dict | None = None
+                ) -> tuple[Array, dict | None]:
+    """Sequential scan over time. state: {"c","n","h","m": (B, H, hd)}."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    zifo = (x.astype(jnp.float32) @ p["w_zifo"].astype(jnp.float32)
+            + p["b_zifo"].astype(jnp.float32))
+    zifo = zifo.reshape(b, s, h, 4 * hd)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        h0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    r = p["r_zifo"].astype(jnp.float32)
+
+    def step(carry, u):
+        c, n, hh, m = carry  # (B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r)         # (B, H, 4hd)
+        g = u + rec
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        # exponential gating with stabilizer m
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (cN, nN, hN, mN), outs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                          jnp.moveaxis(zifo, 1, 0))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h * hd).astype(COMPUTE_DTYPE)
+    new_state = None
+    if state is not None:
+        new_state = {"c": cN, "n": nN, "h": hN, "m": mN}
+    return out @ p["w_out"].astype(COMPUTE_DTYPE), new_state
+
+
+def make_xlstm_state(cfg, batch: int, n_m: int, n_s: int) -> dict:
+    h, hd = cfg.n_heads, cfg.hd
+    return {
+        "mlstm": {
+            "C": jnp.zeros((n_m, batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((n_m, batch, h, hd), jnp.float32),
+        },
+        "slstm": {
+            "c": jnp.zeros((n_s, batch, h, hd), jnp.float32),
+            "n": jnp.zeros((n_s, batch, h, hd), jnp.float32),
+            "h": jnp.zeros((n_s, batch, h, hd), jnp.float32),
+            "m": jnp.full((n_s, batch, h, hd), -1e30, jnp.float32),
+        },
+    }

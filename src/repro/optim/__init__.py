@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_topk,
+    decompress_topk,
+    error_feedback_update,
+)

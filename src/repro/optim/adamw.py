@@ -1,0 +1,51 @@
+"""AdamW + cosine schedule, as plain pytree functions (no optax offline)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=z,
+                      v=jax.tree.map(jnp.zeros_like, params))
+
+
+def cosine_lr(step, base_lr=3e-4, warmup=100, total=10000, min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(1, warmup)
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = min_frac * base_lr + (1 - min_frac) * base_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm=1.0):
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(params, grads, state: AdamWState, lr,
+                 b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, mm, vv):
+        mh = mm / (1 - b1 ** t)
+        vh = vv / (1 - b2 ** t)
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)

@@ -1,0 +1,118 @@
+"""Serving runtime: prefill / decode steps, and ECC split-serve.
+
+Split-serve is the paper's deployment shape: the model is cut at the
+ECC-planned layer s*; layers [0, s) run on the *device* mesh, layers
+[s, F) on the *edge* mesh. These are two separately-compiled programs (the
+paper's device and edge are distinct systems joined by a NOMA radio link,
+not one SPMD partition); the planner prices the activation transfer with
+the NOMA rate model and `transfer_seconds` reports the simulated link time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import Model
+from repro.models.layers import COMPUTE_DTYPE, embed_lookup, logits_out
+from repro.runtime import sharding as shlib
+
+
+def jit_prefill(model: Model, mesh, max_len: int):
+    def fn(params, batch):
+        return model.prefill(params, batch, max_len)
+
+    specs = model.specs()
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = shlib.tree_shardings(mesh, specs, params_shapes)
+    return jax.jit(fn, in_shardings=(p_shard, None)), p_shard
+
+
+def jit_decode_step(model: Model, mesh, batch: int, max_len: int):
+    """Returns (jitted step, params_sharding, cache_sharding)."""
+    specs = model.specs()
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = shlib.tree_shardings(mesh, specs, params_shapes)
+    cache_shapes = jax.eval_shape(lambda: model.make_caches(batch, max_len))
+    c_shard = shlib.cache_shardings(mesh, cache_shapes, model.cfg)
+    tok_shard = NamedSharding(mesh, shlib.batch_spec(mesh, (batch, 1)))
+
+    step = jax.jit(
+        model.decode_step,
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    return step, p_shard, c_shard
+
+
+# --------------------------------------------------------------------------
+# ECC split-serve
+# --------------------------------------------------------------------------
+class SplitPrograms(NamedTuple):
+    device_fn: object     # params_A, tokens -> activation (B, S, D)
+    edge_fn: object       # params_B, activation -> logits
+    split_layer: int
+    act_bytes_per_token: int
+
+
+def _split_params(model: Model, params, s: int):
+    """Split stacked stage params at global block index s."""
+    a_stages, b_stages = [], []
+    seen = 0
+    for spec, p_st in zip(model.stages, params["stages"]):
+        if seen + spec.n_layers <= s:
+            a_stages.append((spec, p_st))
+        elif seen >= s:
+            b_stages.append((spec, p_st))
+        else:
+            cut = s - seen
+            take = lambda t, sl: jax.tree.map(lambda x: x[sl], t)
+            import dataclasses as dc
+            a_stages.append((dc.replace(spec, n_layers=cut),
+                             take(p_st, slice(0, cut))))
+            b_stages.append((dc.replace(spec, n_layers=spec.n_layers - cut),
+                             take(p_st, slice(cut, None))))
+        seen += spec.n_layers
+    return a_stages, b_stages
+
+
+def make_split_serve(model: Model, params, s: int):
+    """Build device/edge programs for split point s (decoder-only archs)."""
+    cfg = model.cfg
+    a_stages, b_stages = _split_params(model, params, s)
+
+    def device_fn(tokens, frontend=None):
+        b, sl = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32)[None], (b, sl))
+        x = embed_lookup(params["embed"], tokens)
+        aux = {"pos": pos,
+               "frontend": None if frontend is None else frontend.astype(COMPUTE_DTYPE),
+               "moe_impl": model.moe_impl, "moe_capacity": model.moe_capacity}
+        for spec, p_st in a_stages:
+            x, _, _ = model._run_stage(spec, p_st, x, aux, None)
+        return x.astype(COMPUTE_DTYPE)
+
+    def edge_fn(x, frontend=None):
+        b, sl, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(sl, dtype=jnp.int32)[None], (b, sl))
+        aux = {"pos": pos,
+               "frontend": None if frontend is None else frontend.astype(COMPUTE_DTYPE),
+               "moe_impl": model.moe_impl, "moe_capacity": model.moe_capacity}
+        for spec, p_st in b_stages:
+            x, _, _ = model._run_stage(spec, p_st, x, aux, None)
+        x = model._final_norm(params, x)
+        return logits_out(x, params["unembed"], cfg.vocab_size)
+
+    act_bytes = cfg.d_model * 2  # bf16 residual stream per token
+    return SplitPrograms(device_fn=jax.jit(device_fn), edge_fn=jax.jit(edge_fn),
+                         split_layer=s, act_bytes_per_token=act_bytes)
+
+
+def transfer_seconds(n_tokens: int, d_model: int, rate_bps: float) -> float:
+    """Simulated NOMA uplink time for the split activation."""
+    bits = n_tokens * d_model * 16
+    return bits / max(rate_bps, 1e-9)

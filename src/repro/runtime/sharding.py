@@ -1,0 +1,107 @@
+"""Runtime sharding: param/cache/batch sharding trees built on the
+neutral rules in repro.pshard (re-exported here for back-compat)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.pshard import (  # noqa: F401
+    RULES,
+    ambient_mesh,
+    axis_size,
+    constrain,
+    spec_for,
+)
+
+
+def tree_shardings(mesh: Mesh, specs_tree, shapes_tree, fsdp: bool = False):
+    """specs_tree: pytree of logical-axes tuples; shapes_tree: matching pytree
+    of jax.ShapeDtypeStruct/arrays. Returns pytree of NamedSharding."""
+    def resolve(axes, arr):
+        return NamedSharding(mesh, spec_for(mesh, axes, arr.shape, fsdp=fsdp))
+
+    return jax.tree.map(
+        resolve, specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# activation / data shardings
+# --------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, shape: tuple, batch_dim: int = 0,
+               seq_dim: int | None = None, seq_axis: str | None = None) -> P:
+    """Shard the batch dim over (pod, data); optionally sequence over an axis
+    (sequence parallelism for batch-1 long-context)."""
+    axes: list = [None] * len(shape)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = axis_size(mesh, dp)
+    if dp and shape[batch_dim] % dp_size == 0 and shape[batch_dim] >= dp_size:
+        axes[batch_dim] = dp
+    elif "data" in mesh.shape and shape[batch_dim] % mesh.shape["data"] == 0:
+        axes[batch_dim] = "data"
+    elif seq_dim is not None and seq_axis is None:
+        seq_axis = "data"  # batch unshardable -> spill onto sequence
+    if (seq_dim is not None and seq_axis is not None
+            and shape[seq_dim] % axis_size(mesh, seq_axis) == 0):
+        axes[seq_dim] = seq_axis
+    return P(*axes)
+
+
+def cache_shardings(mesh: Mesh, caches_shapes, cfg):
+    """Shard KV caches: batch over (pod,data) when divisible, else sequence
+    over every free axis (long-context single-request decode); kv-heads over
+    model when divisible, else the cache SEQUENCE shards over model and the
+    single-pass decode attention runs flash-decoding style (scores and AV
+    stay shard-local, only tiny softmax reductions cross shards; §Perf B)."""
+    model = axis_size(mesh, "model")
+
+    def _seq_axes(batch_sharded: bool, kv_on_model: bool, s_dim: int):
+        """Choose the sequence-dim sharding for a cache of length s_dim."""
+        free = []
+        if not batch_sharded:
+            free += [a for a in ("pod", "data") if a in mesh.shape]
+        if not kv_on_model and "model" in mesh.shape:
+            free.append("model")
+        while free and s_dim % axis_size(mesh, tuple(free)) != 0:
+            free.pop()
+        return tuple(free) if free else None
+
+    def resolve(path, arr):
+        names = [getattr(p, "key", getattr(p, "name", None)) or str(p)
+                 for p in path]
+        shape = arr.shape
+        key = names[-1] if names else ""
+        # KV cache tensors: (L, B, S, KV, hd)
+        if key in ("k", "v") and len(shape) == 5:
+            axes: list = [None] * 5
+            axes[1] = batch_spec(mesh, shape[1:2])[0]
+            kv_ok = shape[3] % model == 0 and shape[3] >= model
+            if kv_ok:
+                axes[3] = "model"
+            axes[2] = _seq_axes(axes[1] is not None, kv_ok, shape[2])
+            return NamedSharding(mesh, P(*axes))
+        if key == "pos" and len(shape) == 3:
+            axes = [None, batch_spec(mesh, shape[1:2])[0], None]
+            kv_ok = (cfg.n_kv_heads % model == 0
+                     and cfg.n_kv_heads >= model)  # mirror the k/v choice
+            axes[2] = _seq_axes(axes[1] is not None, kv_ok, shape[2])
+            return NamedSharding(mesh, P(*axes))
+        # recurrent states (L, B, ...) / enc_out (B, S, D) / pos (B,)
+        if len(shape) >= 2 and key in ("h", "conv", "C", "n", "c", "m"):
+            axes = [None] * len(shape)
+            axes[1] = batch_spec(mesh, shape[1:2])[0]
+            # last dim is a width dim: shard over model when divisible
+            if shape[-1] % model == 0 and shape[-1] >= model:
+                axes[-1] = "model"
+            return NamedSharding(mesh, P(*axes))
+        if key in ("enc_out", "frontend") and len(shape) == 3:
+            return NamedSharding(mesh, batch_spec(mesh, shape))
+        if len(shape) == 1:  # top-level pos counter
+            return NamedSharding(mesh, batch_spec(mesh, shape))
+        return NamedSharding(mesh, P(*[None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(resolve, caches_shapes)

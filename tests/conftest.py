@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: device count must stay 1 here (the 512-device
+XLA_FLAGS override belongs ONLY to launch/dryrun.py)."""
+import jax
+import pytest
+
+from repro.core import GdConfig, make_env, make_weights
+
+
+@pytest.fixture(scope="session")
+def small_env():
+    return make_env(jax.random.PRNGKey(0), n_users=8, n_aps=2, n_sub=4)
+
+
+@pytest.fixture(scope="session")
+def weights(small_env):
+    return make_weights(small_env.n_users, 0.5)
+
+
+@pytest.fixture(scope="session")
+def gd_cfg():
+    return GdConfig(step_size=5e-3, max_iters=120)

@@ -1,0 +1,134 @@
+"""Li-GD optimizer: projections, convergence, Corollary 2/4 behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GdConfig,
+    cold_init,
+    gd_solve,
+    li_gd_loop,
+    make_env,
+    make_weights,
+    plain_gd_loop,
+    planner,
+    profiles,
+    project_simplex_floor,
+    solve,
+    to_physical,
+)
+from repro.core.li_gd import _project
+from repro.core.utility import utility
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 12))
+def test_simplex_projection(seed, m):
+    y = jax.random.normal(jax.random.PRNGKey(seed), (5, m)) * 3.0
+    floor = 1e-3
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
+    assert bool(jnp.all(x >= floor - 1e-6))
+    # idempotent
+    x2 = project_simplex_floor(x, floor)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-5)
+
+
+def test_gd_decreases_utility(small_env, weights, gd_cfg):
+    env = small_env
+    prof = profiles.nin()
+    s = jnp.int32(3)
+    init = _project(cold_init(env), env.radio.beta_min)
+    g0 = utility(env, prof, s, to_physical(init, env), weights)
+    res = gd_solve(env, prof, s, weights, init, gd_cfg)
+    assert float(res.gamma) <= float(g0) + 1e-6
+    assert int(res.iters) > 0
+
+
+def test_ligd_warm_start_reduces_iters(small_env, weights, gd_cfg):
+    """Corollary 4: warm-started Li-GD needs fewer total iterations."""
+    env = small_env
+    prof = profiles.vgg16()
+    li = li_gd_loop(env, prof, weights, gd_cfg)
+    pl = plain_gd_loop(env, prof, weights, gd_cfg)
+    assert int(li.total_iters) < int(pl.total_iters)
+
+
+def test_ligd_per_layer_quality(small_env, weights, gd_cfg):
+    """Warm starts shouldn't find (much) worse optima than cold starts."""
+    env = small_env
+    prof = profiles.nin()
+    li = li_gd_loop(env, prof, weights, gd_cfg)
+    pl = plain_gd_loop(env, prof, weights, gd_cfg)
+    assert float(jnp.min(li.gammas)) <= float(jnp.min(pl.gammas)) * 1.05
+
+
+def test_plan_feasible(small_env, weights, gd_cfg):
+    env = small_env
+    prof = profiles.nin()
+    plan = solve(env, prof, weights, gd_cfg)
+    rc, cc = env.radio, env.comp
+    assert 0 <= int(plan.s) <= prof.n_layers
+    assert bool(jnp.all((plan.sub_up >= 0) & (plan.sub_up < env.n_sub)))
+    assert bool(jnp.all((plan.sub_dn >= 0) & (plan.sub_dn < env.n_sub)))
+    assert bool(jnp.all((plan.p_up >= rc.p_up_min_w - 1e-9) & (plan.p_up <= rc.p_up_max_w + 1e-9)))
+    assert bool(jnp.all((plan.p_dn >= rc.p_dn_min_w - 1e-9) & (plan.p_dn <= rc.p_dn_max_w + 1e-9)))
+    assert bool(jnp.all((plan.r >= cc.r_min - 1e-6) & (plan.r <= cc.r_max + 1e-6)))
+    assert bool(jnp.isfinite(plan.utility))
+    # chosen split is the argmin of the per-layer utilities
+    assert int(plan.s) == int(jnp.argmin(plan.per_layer_utility))
+
+
+def test_gradient_matches_finite_difference(small_env, weights):
+    """Autodiff == the paper's hand-derived gradients (spot check via FD)."""
+    env = small_env
+    prof = profiles.nin()
+    s = jnp.int32(2)
+    norm = _project(cold_init(env), env.radio.beta_min)
+
+    def f_p(pu):
+        n = dict(norm, p_up=pu)
+        return utility(env, prof, s, to_physical(n, env), weights)
+
+    g = jax.grad(f_p)(norm["p_up"])
+    eps = 3e-3  # fp32: FD noise ~ ULP(f)/eps; this eps keeps it ~1e-4
+    for i in range(3):
+        e = jnp.zeros_like(norm["p_up"]).at[i].set(eps)
+        fd = (f_p(norm["p_up"] + e) - f_p(norm["p_up"] - e)) / (2 * eps)
+        assert abs(float(fd - g[i])) <= 5e-3 * max(1.0, abs(float(g[i]))), (i, fd, g[i])
+
+
+def test_weight_tradeoff_monotone(small_env, gd_cfg):
+    """More weight on delay => the planned delay does not increase."""
+    env = small_env
+    prof = profiles.vgg16()
+    from repro.core import baselines
+    Ts = []
+    for wt in (0.2, 0.8):
+        w = make_weights(env.n_users, wt)
+        plan = solve(env, prof, w, gd_cfg)
+        out = baselines.evaluate_plan(env, prof, plan, w)
+        Ts.append(float(jnp.mean(out.T)))
+    assert Ts[1] <= Ts[0] * 1.10  # small tolerance: discrete rounding noise
+
+
+def test_rounding_violation_counter(small_env, weights, gd_cfg):
+    plan = solve(small_env, profiles.nin(), weights, gd_cfg, rounding="paper")
+    v = int(plan.rounding_violations)
+    assert 0 <= v <= 2 * small_env.n_users
+
+
+def test_plan_batch_matches_sequential(small_env, weights, gd_cfg):
+    """vmapped batched Li-GD == per-env solve (beyond-paper batching)."""
+    import jax
+    from repro.core import make_env, planner, profiles
+    envs = [make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in (0, 1)]
+    prof = profiles.nin()
+    stacked = planner.stack_envs(envs)
+    batched = planner.plan_batch(stacked, prof, weights, gd_cfg)
+    for i, env in enumerate(envs):
+        single = solve(env, prof, weights, gd_cfg)
+        assert int(batched.s[i]) == int(single.s)
+        assert abs(float(batched.utility[i]) - float(single.utility)) < 1e-4

@@ -1,0 +1,53 @@
+"""Unit tests for the HLO collective parser (trip counts, ring formulas)."""
+import pytest
+
+from repro.launch.hlo_analysis import _ring_bytes, _shape_bytes, parse_hlo
+
+SAMPLE = """\
+HloModule jit_f, entry_computation_layout={()->()}, num_partitions=8
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  ROOT %a = f32[] add(%x, %y)
+}
+
+%body (p: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+  %ar = f32[16,64]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = f32[64,64]{1,0} all-gather(%y), replica_groups=[4,2]<=[8]T(1,0)
+}
+
+%cond (p: (s32[], f32[16,64])) -> pred[] {
+  %c = s32[] constant(12)
+  %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[16,64]) -> f32[16,64] {
+  %w = (s32[], f32[16,64]) while(%t), condition=%cond, body=%body
+  %rs = f32[2,64]{1,0} reduce-scatter(%a), replica_groups=[1,8]<=[8]
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,64]{1,0}") == 16 * 64 * 4
+    assert _shape_bytes("(bf16[8,8], f32[4])") == 8 * 8 * 2 + 16
+    assert _shape_bytes("s32[]") == 4  # scalar: one element
+
+
+def test_ring_formulas():
+    assert _ring_bytes("all-reduce", 100, 4) == pytest.approx(150.0)
+    assert _ring_bytes("all-gather", 100, 4) == pytest.approx(75.0)
+    assert _ring_bytes("reduce-scatter", 100, 4) == pytest.approx(300.0)
+    assert _ring_bytes("collective-permute", 100, 4) == 100.0
+    assert _ring_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_parse_trip_attribution():
+    r = parse_hlo(SAMPLE)
+    assert r["num_partitions"] == 8
+    # body collectives x12 trips + entry reduce-scatter x1
+    assert r["per_kind_count"]["all-reduce"] == 12
+    assert r["per_kind_count"]["all-gather"] == 12
+    assert r["per_kind_count"]["reduce-scatter"] == 1
+    ar_bytes = 16 * 64 * 4
+    assert r["per_kind_bytes"]["all-reduce"] == 12 * ar_bytes
+    assert r["n_whiles"] == 1

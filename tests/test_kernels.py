@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, make_env
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,hd,causal,window",
+    [
+        (1, 32, 32, 4, 4, 32, True, 0),
+        (2, 64, 64, 4, 2, 32, True, 0),
+        (2, 48, 48, 8, 1, 64, True, 0),       # MQA, non-multiple seq (pads)
+        (1, 64, 64, 4, 2, 32, False, 0),      # bidirectional
+        (1, 64, 64, 4, 4, 32, True, 16),      # local window
+        (1, 8, 64, 4, 2, 32, True, 0),        # short q vs long kv (decode-ish)
+    ],
+)
+def test_flash_attention_sweep(dtype, b, sq, sk, h, kv, hd, causal, window):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, sq, h, hd)).astype(dtype)
+    k = jax.random.normal(keys[1], (b, sk, kv, hd)).astype(dtype)
+    v = jax.random.normal(keys[2], (b, sk, kv, hd)).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=16, block_k=16, interpret=True)
+    g = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    r = ref.flash_attention_ref(qf, kf, vf, group=g, causal=causal,
+                                window=window)
+    r = r.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(r, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "b,s,w,bs,bw,with_h0",
+    [
+        (1, 32, 64, 8, 32, False),
+        (2, 40, 96, 16, 32, True),     # non-multiple seq (pads)
+        (3, 128, 128, 64, 128, True),
+        (2, 16, 200, 16, 128, False),  # width pads
+    ],
+)
+def test_rg_lru_sweep(b, s, w, bs, bw, with_h0):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    log_a = -jnp.abs(jax.random.normal(keys[0], (b, s, w)))
+    bb = jax.random.normal(keys[1], (b, s, w))
+    h0 = jax.random.normal(keys[2], (b, w)) if with_h0 else None
+    out = ops.rg_lru(log_a, bb, h0, interpret=True, block_s=bs, block_w=bw)
+    r = ref.rg_lru_ref(log_a, bb, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize(
+    "u,n,m,bu,bm",
+    [
+        (6, 2, 4, 4, 4),
+        (10, 3, 6, 4, 8),    # pads users + subchannels
+        (16, 4, 8, 8, 8),
+        (9, 2, 12, 8, 8),
+    ],
+)
+def test_noma_rates_sweep(u, n, m, bu, bm):
+    env = make_env(jax.random.PRNGKey(2), n_users=u, n_aps=n, n_sub=m)
+    key = jax.random.PRNGKey(3)
+    beta = jax.random.dirichlet(key, jnp.ones(m), (u,))
+    p = jax.random.uniform(jax.random.PRNGKey(4), (u,), minval=0.01, maxval=0.3)
+    out = ops.noma_uplink_rates(env, beta, p, interpret=True,
+                                block_u=bu, block_v=bu, block_m=bm)
+    r = channel.uplink_rates(env, beta, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-5,
+                               atol=1e-3)
+
+
+def test_noma_pairwise_oracle_matches_channel_decomposition(small_env):
+    """The kernel's (intra, inter) decomposition reproduces uplink_sinr."""
+    env = small_env
+    u, m = env.n_users, env.n_sub
+    beta = jnp.ones((u, m)) / m
+    p = jnp.full((u,), 0.2)
+    own = env.own_gain_up().astype(jnp.float32)
+    tx = beta * p[:, None]
+    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
+    same = env.same_cell()
+    intra, inter = ref.noma_pairwise_ref(own, own, tx * own, tx, g_vu, same,
+                                         descending=True)
+    sinr = p[:, None] * own / (intra + inter + env.noise_up)
+    np.testing.assert_allclose(
+        np.asarray(sinr), np.asarray(channel.uplink_sinr(env, beta, p)),
+        rtol=1e-4,
+    )

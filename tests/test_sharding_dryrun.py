@@ -1,0 +1,93 @@
+"""Sharding rules + a miniature multi-device dry-run in a subprocess
+(the 8-device XLA flag must not leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import batch_spec, spec_for
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_mesh(shape, axes):
+    # AbstractMesh: rule resolution only needs mesh.shape (1 real device here)
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def test_spec_for_divisibility():
+    mesh = make_mesh((1, 4), ("data", "model"))
+    # divisible: sharded
+    assert spec_for(mesh, ("embed", "mlp"), (64, 128)) == P(None, "model")
+    # non-divisible: replicated
+    assert spec_for(mesh, ("embed", "mlp"), (64, 6)) == P(None, None)
+    # vocab over model
+    assert spec_for(mesh, ("vocab", "embed"), (512, 64)) == P("model", None)
+
+
+def test_spec_for_no_duplicate_axis():
+    mesh = make_mesh((1, 4), ("data", "model"))
+    # MoE weights: experts and mlp both want 'model'; experts wins
+    sp = spec_for(mesh, ("experts", "embed", "mlp"), (8, 64, 128))
+    assert sp == P("model", None, None)
+
+
+def test_batch_spec():
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    assert batch_spec(mesh, (8, 128)) == P(("pod", "data"), None)
+    # batch=1: unshardable -> spill to sequence
+    sp = batch_spec(mesh, (1, 128), seq_dim=1)
+    assert sp == P(None, "data")
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    """Lower+compile a reduced arch on a fake 8-device (2,4) mesh in a
+    subprocess; assert memory/cost analysis and collective parse work."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax
+        from repro import configs
+        from repro.models import Model
+        from repro.launch.mesh import make_mesh
+        from repro.launch.hlo_analysis import parse_hlo
+        from repro.runtime.train import init_state, jit_train_step
+
+        cfg = configs.get("qwen1.5-0.5b").reduced()
+        model = Model(cfg, remat=True)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        make, _ = jit_train_step(model, mesh)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((4, 32), jax.numpy.int32),
+            "targets": jax.ShapeDtypeStruct((4, 32), jax.numpy.int32),
+        }
+        state_shapes = jax.eval_shape(
+            lambda: init_state(model, jax.random.PRNGKey(0)))
+        with mesh:
+            lowered = make(specs).lower(state_shapes, specs)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        hlo = parse_hlo(compiled.as_text())
+        print(json.dumps({
+            "flops": ca.get("flops", 0.0),
+            "colls": hlo["collective_bytes_ring"],
+            "n_whiles": hlo["n_whiles"],
+            "partitions": hlo["num_partitions"],
+        }))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["partitions"] == 8
+    assert res["flops"] > 0
+    assert res["n_whiles"] >= 2          # fwd + bwd scan loops
+    assert res["colls"] > 0              # TP all-reduces exist
