@@ -1,5 +1,6 @@
 """ECC planning across the 10 assigned LM architectures: how the optimal
-split point moves with the radio environment and QoS weights.
+split point moves with the radio environment and QoS weights — plus an
+online re-planning demo over a correlated-fading episode.
 
   PYTHONPATH=src python examples/noma_planning.py
 """
@@ -8,6 +9,8 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import GdConfig, make_env, make_weights, planner, profiles
+from repro.planning import PlannerEngine
+from repro.scenarios import Scenario, presets
 
 cfg_gd = GdConfig(max_iters=150)
 
@@ -25,3 +28,28 @@ for name in configs.all_names():
 
 print("\nHigher w_T (latency matters more) pushes the split toward the edge"
       "\n(s* -> 0, full offload); higher w_E keeps layers on the device.")
+
+# --------------------------------------------------------------------------
+# Online re-planning: a hotspot scenario with time-correlated fading. The
+# engine warm-starts each epoch from the previous optimum, so tracking the
+# channel costs a fraction of a fresh solve.
+# --------------------------------------------------------------------------
+scfg = presets.get("iot_massive")
+print(f"\nOnline episode: preset={scfg.name}, U={scfg.n_users}, "
+      f"N={scfg.n_aps}, M={scfg.n_sub}, fading rho={scfg.rho:.3f}")
+prof = profiles.nin()
+engine = PlannerEngine(
+    prof,
+    weights=make_weights(scfg.n_users),
+    cfg=GdConfig(step_size=1e-2, eps=1e-4, max_iters=400, optimizer="adam"),
+)
+state = None
+print(f"{'epoch':>5} {'s*':>4} {'gd_iters':>9} {'utility':>9}")
+for t, env in enumerate(Scenario(scfg).episode(jax.random.PRNGKey(7), 8)):
+    state = engine.replan(state, env)
+    print(f"{t:5d} {int(state.plan.s):4d} {int(state.total_iters):9d}"
+          f" {float(state.plan.utility):9.4f}")
+print("Epoch 0 is a cold solve; later epochs warm-start from the previous"
+      "\noptimum and need far fewer GD iterations when the channel stays"
+      "\ncorrelated (Corollary 4, applied across time). See"
+      "\nbenchmarks/online_replan.py for the warm-vs-cold comparison.")

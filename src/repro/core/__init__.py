@@ -16,6 +16,7 @@ from repro.core.channel import (  # noqa: F401
     downlink_sinr,
     make_env,
     oma_rates,
+    set_sinr_backend,
     uplink_rates,
     uplink_sinr,
     user_rates,
@@ -24,7 +25,9 @@ from repro.core.utility import delay_energy, per_user_utility, utility  # noqa: 
 from repro.core.li_gd import (  # noqa: F401
     GdResult,
     LoopResult,
+    assemble_plan,
     cold_init,
+    gd_loop,
     gd_solve,
     li_gd_loop,
     plain_gd_loop,

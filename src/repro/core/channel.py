@@ -22,6 +22,30 @@ from repro.core.types import Array, ComputeConstants, NetworkEnv, RadioConstants
 
 LOG2 = 0.6931471805599453
 
+# SINR backend: 'einsum' is the differentiable XLA reference (used inside the
+# GD solver); 'pallas' routes the pairwise-interference reductions through the
+# tiled kernel in repro.kernels.noma_rates (large-U evaluation path), falling
+# back to interpret mode off-TPU; 'pallas_interpret' forces interpret mode.
+_SINR_BACKENDS = ("einsum", "pallas", "pallas_interpret")
+_SINR_BACKEND = "einsum"
+
+
+def set_sinr_backend(backend: str) -> str:
+    """Select the default SINR backend; returns the previous one.
+
+    The global is resolved at *trace* time: programs already jitted keep the
+    backend they were traced with (no retrace on switch). Inside long-lived
+    jitted code, pass backend= explicitly instead of relying on the global."""
+    global _SINR_BACKEND
+    if backend not in _SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
+    prev, _SINR_BACKEND = _SINR_BACKEND, backend
+    return prev
+
+
+def _pallas_interpret(backend: str) -> bool:
+    return backend == "pallas_interpret" or jax.default_backend() != "tpu"
+
 
 def make_env(
     key: jax.Array,
@@ -54,63 +78,90 @@ def _cell_onehot(env: NetworkEnv) -> Array:
     return jax.nn.one_hot(env.ap, env.n_aps, dtype=env.g_up.dtype)
 
 
-def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array) -> Array:
+def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array,
+                backend: str | None = None) -> Array:
     """Paper eq. (5). Returns SINR (U, M)."""
+    backend = _SINR_BACKEND if backend is None else backend
+    if backend not in _SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
     own = env.own_gain_up()                      # (U, M) gain to own AP
     tx = beta_up * p_up[:, None]                  # (U, M) effective tx power
-    cell = _cell_onehot(env)                      # (U, N)
-    # Inter-cell interference received at AP n from users NOT in cell n,
-    # computed directly with an off-cell mask (no subtraction: fp32-safe).
-    inter_at = jnp.einsum("vn,vm,vnm->nm", 1.0 - cell, tx, env.g_up)  # (N, M)
-    inter = jnp.einsum("un,nm->um", cell, inter_at)
-    same = env.same_cell().astype(own.dtype)      # (U, U)
-    # Intra-cell: same-cell users with weaker own-gain (decoded after me).
-    weaker = (own[None, :, :] < own[:, None, :]).astype(own.dtype)  # (U, V, M)
-    intra = jnp.einsum("uvm,vm->um", weaker * same[:, :, None], tx * own)
+    if backend != "einsum":
+        from repro.kernels import ops
+        intra, inter = ops.noma_pairwise_up(env, tx,
+                                            interpret=_pallas_interpret(backend))
+    else:
+        cell = _cell_onehot(env)                  # (U, N)
+        # Inter-cell interference received at AP n from users NOT in cell n,
+        # computed directly with an off-cell mask (no subtraction: fp32-safe).
+        inter_at = jnp.einsum("vn,vm,vnm->nm", 1.0 - cell, tx, env.g_up)  # (N, M)
+        inter = jnp.einsum("un,nm->um", cell, inter_at)
+        same = env.same_cell().astype(own.dtype)  # (U, U)
+        # Intra-cell: same-cell users with weaker own-gain (decoded after me).
+        weaker = (own[None, :, :] < own[:, None, :]).astype(own.dtype)  # (U, V, M)
+        intra = jnp.einsum("uvm,vm->um", weaker * same[:, :, None], tx * own)
     sig = p_up[:, None] * own
     return sig / (intra + inter + env.noise_up)
 
 
-def uplink_rates(env: NetworkEnv, beta_up: Array, p_up: Array) -> Array:
+def uplink_rates(env: NetworkEnv, beta_up: Array, p_up: Array,
+                 backend: str | None = None) -> Array:
     """Paper eq. (6): per-(user, subchannel) rate in bit/s; sum over m gives
     the user's total rate under the relaxation."""
-    sinr = uplink_sinr(env, beta_up, p_up)
+    sinr = uplink_sinr(env, beta_up, p_up, backend=backend)
     bw = env.radio.bandwidth_up_hz / env.n_sub
     return beta_up * bw * jnp.log1p(sinr) / LOG2
 
 
-def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array) -> Array:
+def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array,
+                  backend: str | None = None) -> Array:
     """Paper eq. (8). Returns SINR (U, M)."""
+    backend = _SINR_BACKEND if backend is None else backend
+    if backend not in _SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
     own = env.own_gain_dn()                       # (U, M) gain my AP -> me
     tx = beta_dn * p_dn[:, None]                  # (U, M) power my AP spends on me
-    cell = _cell_onehot(env)                      # (U, N)
-    # Total tx power of AP n on subchannel m: (N, M)
-    ap_tx = jnp.einsum("un,um->nm", cell, tx)
-    # Interference from *other* APs received at me, masked directly
-    # (no subtraction: fp32-safe): sum_{l != ap(u)} ap_tx[l,m] * g_dn[l,u,m]
-    g_all = jnp.swapaxes(env.g_dn, 0, 1)          # (U, N, M)
-    inter = jnp.einsum("nm,unm,un->um", ap_tx, g_all, 1.0 - cell)
-    # Intra-cell: same-cell users with *stronger* downlink gain (decoded after me)
-    same = env.same_cell().astype(own.dtype)
-    stronger = (own[None, :, :] > own[:, None, :]).astype(own.dtype)
-    intra = jnp.einsum("uvm,vm->um", stronger * same[:, :, None], tx) * own
+    if backend != "einsum":
+        from repro.kernels import ops
+        intra, inter = ops.noma_pairwise_dn(env, tx,
+                                            interpret=_pallas_interpret(backend))
+        intra = intra * own
+    else:
+        cell = _cell_onehot(env)                  # (U, N)
+        # Total tx power of AP n on subchannel m: (N, M)
+        ap_tx = jnp.einsum("un,um->nm", cell, tx)
+        # Interference from *other* APs received at me, masked directly
+        # (no subtraction: fp32-safe): sum_{l != ap(u)} ap_tx[l,m] * g_dn[l,u,m]
+        g_all = jnp.swapaxes(env.g_dn, 0, 1)      # (U, N, M)
+        inter = jnp.einsum("nm,unm,un->um", ap_tx, g_all, 1.0 - cell)
+        # Intra-cell: same-cell users with *stronger* downlink gain (decoded after me)
+        same = env.same_cell().astype(own.dtype)
+        stronger = (own[None, :, :] > own[:, None, :]).astype(own.dtype)
+        intra = jnp.einsum("uvm,vm->um", stronger * same[:, :, None], tx) * own
     sig = p_dn[:, None] * own
     return sig / (intra + inter + env.noise_dn)
 
 
-def downlink_rates(env: NetworkEnv, beta_dn: Array, p_dn: Array) -> Array:
+def downlink_rates(env: NetworkEnv, beta_dn: Array, p_dn: Array,
+                   backend: str | None = None) -> Array:
     """Paper eq. (9)."""
-    sinr = downlink_sinr(env, beta_dn, p_dn)
+    sinr = downlink_sinr(env, beta_dn, p_dn, backend=backend)
     bw = env.radio.bandwidth_dn_hz / env.n_sub
     return beta_dn * bw * jnp.log1p(sinr) / LOG2
 
 
 def user_rates(
-    env: NetworkEnv, beta_up: Array, beta_dn: Array, p_up: Array, p_dn: Array
+    env: NetworkEnv, beta_up: Array, beta_dn: Array, p_up: Array, p_dn: Array,
+    backend: str = "einsum",
 ) -> tuple[Array, Array]:
-    """Total uplink/downlink rate per user (bit/s), floored for stability."""
-    r_up = jnp.sum(uplink_rates(env, beta_up, p_up), axis=-1)
-    r_dn = jnp.sum(downlink_rates(env, beta_dn, p_dn), axis=-1)
+    """Total uplink/downlink rate per user (bit/s), floored for stability.
+
+    backend is pinned to 'einsum' (not the global default): this is the GD
+    gradient path (utility -> user_rates) and jax.grad cannot differentiate
+    through the Pallas kernel. Pass backend explicitly to route pure
+    evaluation through the tiled kernel."""
+    r_up = jnp.sum(uplink_rates(env, beta_up, p_up, backend=backend), axis=-1)
+    r_dn = jnp.sum(downlink_rates(env, beta_dn, p_dn, backend=backend), axis=-1)
     return jnp.maximum(r_up, 1e-9), jnp.maximum(r_dn, 1e-9)
 
 

@@ -171,7 +171,7 @@ def gd_solve(
 
 
 # --------------------------------------------------------------------------
-# Li-GD: warm-started loop over split points (Table I)
+# split-point loop (Table I), unified over warm-start policies
 # --------------------------------------------------------------------------
 class LoopResult(NamedTuple):
     gammas: Array      # (F+1,)
@@ -180,34 +180,58 @@ class LoopResult(NamedTuple):
     total_iters: Array
 
 
+def gd_loop(
+    env: NetworkEnv,
+    prof: ModelProfile,
+    w: EccWeights,
+    cfg: GdConfig,
+    *,
+    chain: bool = True,
+    warm: dict | None = None,
+) -> LoopResult:
+    """Solve all F+1 split points with one warm-start policy.
+
+    chain=True,  warm=None  -- paper Li-GD (Table I lines 13-16): split s+1
+                               starts from split s's optimum.
+    chain=False, warm=None  -- plain GD: every split starts from cold_init
+                               (the paper's 'traditional GD' baseline).
+    warm=stacked norms      -- online mode: split s starts from warm[s], the
+                               previous *epoch's* optimum at the same split
+                               (leaves lead with (F+1, ...)). Under correlated
+                               fading this is the Li-GD trick applied across
+                               time instead of across split points.
+    """
+    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
+    init = cold_init(env)
+
+    if warm is not None:
+        def step(carry, xs):
+            s, w0 = xs
+            res = gd_solve(env, prof, s, w, w0, cfg)
+            return carry, (res.gamma, res.iters, res.norm)
+
+        _, (gammas, iters, norms) = jax.lax.scan(step, 0, (splits, warm))
+    else:
+        def step(carry_norm, s):
+            res = gd_solve(env, prof, s, w, carry_norm, cfg)
+            return (res.norm if chain else carry_norm), (res.gamma, res.iters, res.norm)
+
+        _, (gammas, iters, norms) = jax.lax.scan(step, init, splits)
+    return LoopResult(gammas=gammas, iters=iters, norms=norms,
+                      total_iters=jnp.sum(iters))
+
+
 def li_gd_loop(
     env: NetworkEnv, prof: ModelProfile, w: EccWeights, cfg: GdConfig
 ) -> LoopResult:
-    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
-
-    def step(carry_norm, s):
-        res = gd_solve(env, prof, s, w, carry_norm, cfg)
-        return res.norm, (res.gamma, res.iters, res.norm)
-
-    _, (gammas, iters, norms) = jax.lax.scan(step, cold_init(env), splits)
-    return LoopResult(gammas=gammas, iters=iters, norms=norms,
-                      total_iters=jnp.sum(iters))
+    return gd_loop(env, prof, w, cfg, chain=True)
 
 
 def plain_gd_loop(
     env: NetworkEnv, prof: ModelProfile, w: EccWeights, cfg: GdConfig
 ) -> LoopResult:
     """Cold-start GD per split point (the paper's 'traditional GD' baseline)."""
-    splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
-    init = cold_init(env)
-
-    def step(_, s):
-        res = gd_solve(env, prof, s, w, init, cfg)
-        return 0, (res.gamma, res.iters, res.norm)
-
-    _, (gammas, iters, norms) = jax.lax.scan(step, 0, splits)
-    return LoopResult(gammas=gammas, iters=iters, norms=norms,
-                      total_iters=jnp.sum(iters))
+    return gd_loop(env, prof, w, cfg, chain=False)
 
 
 # --------------------------------------------------------------------------
@@ -327,5 +351,7 @@ def solve(
     method: str = "li_gd",
     rounding: str = "best",
 ) -> SplitPlan:
-    loop = {"li_gd": li_gd_loop, "gd": plain_gd_loop}[method](env, prof, w, cfg)
+    if method not in ("li_gd", "gd"):
+        raise KeyError(method)
+    loop = gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
     return assemble_plan(env, loop, prof, rounding=rounding, w=w)

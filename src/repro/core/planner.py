@@ -1,12 +1,14 @@
-"""ECC planner: the public API that turns (network env, model profile,
-QoS weights) into a discrete SplitPlan. This is the paper's contribution
-packaged as the framework's first-class feature -- the serving runtime
-(repro.runtime.split_serve) consumes SplitPlan to place stage boundaries.
+"""Back-compat planner facade: turns (network env, model profile, QoS
+weights) into a discrete SplitPlan with a single call.
+
+This module is a thin wrapper over repro.core.li_gd.solve. New code that
+plans repeatedly -- Monte-Carlo batches or online re-planning across a
+time-correlated scenario -- should use repro.planning.PlannerEngine, which
+owns the compiled-solver cache and the warm-start state (the former
+plan_batch/stack_envs helpers live there as PlannerEngine.plan_many and
+planning.stack_envs).
 """
 from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
 
 from repro.core import baselines, li_gd, profiles
 from repro.core.types import (
@@ -41,31 +43,6 @@ def plan_for_arch(env: NetworkEnv, arch_cfg, seq: int, batch: int = 1,
     """Plan a split for one of the assigned LM architectures."""
     prof = profiles.from_arch_config(arch_cfg, seq=seq, batch=batch)
     return plan(env, prof, weights, cfg)
-
-
-def plan_batch(envs: NetworkEnv, prof: ModelProfile,
-               weights: EccWeights | None = None,
-               cfg: GdConfig = GdConfig(), method: str = "li_gd") -> SplitPlan:
-    """Batched Li-GD over stacked channel realizations (beyond-paper):
-    `envs` is a NetworkEnv whose array leaves carry a leading Monte-Carlo
-    dim (same radio/compute constants). One compiled program optimizes all
-    draws in parallel -- this is the production shape for re-planning under
-    fading (the paper re-runs the solver per draw)."""
-    n_users = envs.g_up.shape[1]
-    if weights is None:
-        weights = make_weights(n_users)
-
-    def one(env):
-        return li_gd.solve(env, prof, weights, cfg, method=method)
-
-    import jax
-    return jax.vmap(one)(envs)
-
-
-def stack_envs(envs: list[NetworkEnv]) -> NetworkEnv:
-    """Stack same-shape environments along a leading Monte-Carlo dim."""
-    import jax
-    return jax.tree.map(lambda *xs: jax.numpy.stack(xs), *envs)
 
 
 def compare_all(env: NetworkEnv, prof: ModelProfile,

@@ -1,0 +1,11 @@
+"""Version shims for the Pallas TPU API."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams.
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    return _PARAMS_CLS(dimension_semantics=dimension_semantics)

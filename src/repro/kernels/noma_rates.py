@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def _kernel(own_u_ref, own_v_ref, w_intra_ref, w_power_ref, g_vu_ref,
             same_ref, intra_ref, inter_ref, acc_i_ref, acc_x_ref, *,
@@ -106,8 +108,8 @@ def noma_pairwise_kernel(
             pltpu.VMEM((bu, bm), jnp.float32),
             pltpu.VMEM((bu, bm), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
     )(own_u, own_v, w_intra, w_power, g_vu, same)

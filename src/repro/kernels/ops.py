@@ -61,6 +61,65 @@ def flash_attention(
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
 
+def _noma_pairwise_padded(own, w_intra, w_power, g_vu, same, descending,
+                          interpret, block_u, block_v, block_m):
+    """Pad to block multiples, run the kernel, slice back to (U, M)."""
+    u, m = own.shape
+    bm = min(block_m, m)
+    own_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
+    wi_p = _pad_to(_pad_to(w_intra, block_u, 0), bm, 1)
+    wp_p = _pad_to(_pad_to(w_power, block_u, 0), bm, 1)
+    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_u, 0), block_u, 1), bm, 2)
+    same_p = _pad_to(_pad_to(same, block_u, 0), block_u, 1)
+    intra, inter = noma_pairwise_kernel(
+        own_p, own_p, wi_p, wp_p, g_p, same_p,
+        descending=descending, block_u=block_u, block_v=block_v, block_m=bm,
+        interpret=interpret,
+    )
+    return intra[:u, :m], inter[:u, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
+def noma_pairwise_up(
+    env: NetworkEnv,
+    tx: jax.Array,        # (U, M) beta_up * p_up
+    interpret: bool = False,
+    block_u: int = 8,
+    block_v: int = 8,
+    block_m: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Uplink (intra, inter) interference terms of eq. (5) via the Pallas
+    kernel: the exact denominators consumed by channel.uplink_sinr."""
+    own = env.own_gain_up().astype(jnp.float32)
+    tx = tx.astype(jnp.float32)
+    # gain of interferer v at user u's AP: g_up[v, ap[u], m] -> (V, U, M)
+    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
+    same = env.same_cell().astype(jnp.float32)
+    return _noma_pairwise_padded(own, tx * own, tx, g_vu, same, True,
+                                 interpret, block_u, block_v, block_m)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
+def noma_pairwise_dn(
+    env: NetworkEnv,
+    tx: jax.Array,        # (U, M) beta_dn * p_dn
+    interpret: bool = False,
+    block_u: int = 8,
+    block_v: int = 8,
+    block_m: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Downlink (intra, inter) terms of eq. (8). The returned intra term is
+    sum_v stronger*same * tx[v]; the caller multiplies by own-gain (the
+    receiver-side factor in eq. 8), matching channel.downlink_sinr."""
+    own = env.own_gain_dn().astype(jnp.float32)
+    tx = tx.astype(jnp.float32)
+    # gain of interferer v's AP at user u: g_dn[ap[v], u, m] -> (V, U, M)
+    g_vu = env.g_dn[env.ap, :, :].astype(jnp.float32)
+    same = env.same_cell().astype(jnp.float32)
+    return _noma_pairwise_padded(own, tx, tx, g_vu, same, False,
+                                 interpret, block_u, block_v, block_m)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_uplink_rates(
     env: NetworkEnv,
@@ -73,23 +132,10 @@ def noma_uplink_rates(
 ) -> jax.Array:
     """Kernel-backed replacement for repro.core.channel.uplink_rates."""
     own = env.own_gain_up().astype(jnp.float32)
-    tx = (beta_up * p_up[:, None]).astype(jnp.float32)
-    # gain of interferer v at user u's AP: g_up[v, ap[u], m] -> (V, U, M)
-    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
-    same = env.same_cell().astype(jnp.float32)
-    u, m = own.shape
-    bm = min(block_m, m)
-    own_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
-    tx_p = _pad_to(_pad_to(tx, block_u, 0), bm, 1)
-    up = own_p.shape[0]
-    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_u, 0), block_u, 1), bm, 2)
-    same_p = _pad_to(_pad_to(same, block_u, 0), block_u, 1)
-    intra, inter = noma_pairwise_kernel(
-        own_p, own_p, tx_p * own_p, tx_p, g_p, same_p,
-        descending=True, block_u=block_u, block_v=block_v, block_m=bm,
-        interpret=interpret,
-    )
-    intra, inter = intra[:u, :m], inter[:u, :m]
+    tx = beta_up * p_up[:, None]
+    intra, inter = noma_pairwise_up(env, tx, interpret=interpret,
+                                    block_u=block_u, block_v=block_v,
+                                    block_m=block_m)
     sinr = p_up[:, None] * own / (intra + inter + env.noise_up)
     bw = env.radio.bandwidth_up_hz / env.n_sub
     return beta_up * bw * jnp.log1p(sinr) / LOG2

@@ -1,0 +1,7 @@
+"""Unified planning stack: PlannerEngine over static, batched, and
+time-correlated (online warm-start) environments."""
+from repro.planning.engine import (  # noqa: F401
+    PlannerEngine,
+    PlanState,
+    stack_envs,
+)

@@ -1,0 +1,167 @@
+"""PlannerEngine: the unified entry point for single-shot, batched, and
+online warm-started ECC planning.
+
+The engine owns a cache of compiled solver programs keyed on
+(entry kind, env shape, GdConfig, method, rounding), so a serving loop that
+re-plans every epoch pays tracing/compilation once per network shape. Three
+entry points share the cache:
+
+  plan(env)             -- one-shot solve (the paper's Table I).
+  plan_many(envs)       -- vmapped Monte-Carlo over stacked realizations
+                           (one compiled program optimizes all draws).
+  replan(prev, env)     -- online Li-GD: every split point warm-starts from
+                           the previous epoch's normalized optimum at the
+                           same split. Under time-correlated fading the
+                           previous optimum is near-optimal, so this is the
+                           paper's warm-start argument (Corollary 4) applied
+                           across *time* instead of across split points.
+
+plan/replan return a PlanState carrying both the discrete SplitPlan and the
+stacked normalized optima needed to warm-start the next epoch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import li_gd
+from repro.core.types import (
+    Array,
+    EccWeights,
+    GdConfig,
+    ModelProfile,
+    NetworkEnv,
+    SplitPlan,
+    make_weights,
+)
+
+
+class PlanState(NamedTuple):
+    """A plan plus the solver state needed to warm-start the next epoch."""
+
+    plan: SplitPlan
+    norms: dict          # per-split normalized optima, leaves lead with (F+1, ...)
+    total_iters: Array   # () total GD iterations spent producing this plan
+
+
+def stack_envs(envs: Sequence[NetworkEnv]) -> NetworkEnv:
+    """Stack same-shape environments along a leading Monte-Carlo dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *envs)
+
+
+def _solve_state(env, prof, w, cfg, method, rounding) -> PlanState:
+    loop = li_gd.gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
+    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
+    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters)
+
+
+def _resolve_state(env, prof, w, warm, cfg, method, rounding) -> PlanState:
+    del method  # warm mode supersedes the chain-vs-cold distinction
+    loop = li_gd.gd_loop(env, prof, w, cfg, warm=warm)
+    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
+    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters)
+
+
+class PlannerEngine:
+    """Compiled-solver cache + unified planning API for one model profile.
+
+    method: 'li_gd' (paper warm-start chain) or 'gd' (cold-start baseline).
+    rounding: 'best' | 'greedy' | 'paper' (see li_gd.assemble_plan).
+    """
+
+    def __init__(
+        self,
+        prof: ModelProfile,
+        weights: EccWeights | None = None,
+        cfg: GdConfig = GdConfig(),
+        method: str = "li_gd",
+        rounding: str = "best",
+    ):
+        if method not in ("li_gd", "gd"):
+            raise KeyError(method)
+        self.prof = prof
+        self.weights = weights
+        self.cfg = cfg
+        self.method = method
+        self.rounding = rounding
+        self._cache: dict[tuple, object] = {}
+
+    # -- compiled-program cache ------------------------------------------
+    def _env_shape(self, env: NetworkEnv) -> tuple:
+        return tuple(env.g_up.shape)
+
+    def _compiled(self, kind: str, env: NetworkEnv):
+        key = (kind, self._env_shape(env), self.cfg, self.method, self.rounding)
+        fn = self._cache.get(key)
+        if fn is None:
+            if kind == "plan":
+                base = functools.partial(_solve_state, cfg=self.cfg,
+                                         method=self.method, rounding=self.rounding)
+                fn = jax.jit(base)
+            elif kind == "plan_many":
+                base = functools.partial(_solve_state, cfg=self.cfg,
+                                         method=self.method, rounding=self.rounding)
+                fn = jax.jit(jax.vmap(base, in_axes=(0, None, None)))
+            elif kind == "replan":
+                base = functools.partial(_resolve_state, cfg=self.cfg,
+                                         method=self.method, rounding=self.rounding)
+                fn = jax.jit(base)
+            else:
+                raise KeyError(kind)
+            self._cache[key] = fn
+        return fn
+
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def _w(self, env: NetworkEnv, weights, n_users: int | None = None) -> EccWeights:
+        if weights is not None:
+            return weights
+        if self.weights is not None:
+            return self.weights
+        return make_weights(env.n_users if n_users is None else n_users)
+
+    # -- entry points ----------------------------------------------------
+    def plan(self, env: NetworkEnv, weights: EccWeights | None = None) -> PlanState:
+        """One-shot solve of a static environment."""
+        return self._compiled("plan", env)(env, self.prof, self._w(env, weights))
+
+    def plan_many(
+        self,
+        envs: NetworkEnv | Sequence[NetworkEnv],
+        weights: EccWeights | None = None,
+    ) -> PlanState:
+        """Batched Monte-Carlo solve: `envs` is either a list of same-shape
+        environments or a NetworkEnv whose array leaves carry a leading
+        batch dim. Returns a PlanState with the same leading dim."""
+        if not isinstance(envs, NetworkEnv):
+            envs = list(envs)
+            if not envs:
+                raise ValueError("plan_many needs at least one environment")
+            envs = stack_envs(envs)
+        w = self._w(envs, weights, n_users=envs.g_up.shape[1])
+        return self._compiled("plan_many", envs)(envs, self.prof, w)
+
+    def replan(
+        self,
+        prev: PlanState | None,
+        env: NetworkEnv,
+        weights: EccWeights | None = None,
+    ) -> PlanState:
+        """Online re-plan for the next epoch of a time-correlated scenario,
+        warm-starting each split point from `prev.norms`. Falls back to a
+        cold plan() when there is no previous state."""
+        if prev is None:
+            return self.plan(env, weights)
+        warm_shape = tuple(prev.norms["beta_up"].shape[1:])
+        if warm_shape != (env.n_users, env.n_sub):
+            raise ValueError(
+                f"warm-start state is for a (U, M)={warm_shape} network but the "
+                f"new env has ({env.n_users}, {env.n_sub}); scenario shapes must "
+                "stay static across epochs (use plan() after a shape change)")
+        return self._compiled("replan", env)(
+            env, self.prof, self._w(env, weights), prev.norms
+        )

@@ -1,3 +1,8 @@
 from repro.runtime.train import TrainState, init_state, jit_train_step, make_train_step  # noqa: F401
-from repro.runtime.serve import jit_decode_step, jit_prefill, make_split_serve  # noqa: F401
+from repro.runtime.serve import (  # noqa: F401
+    OnlineSplitServer,
+    jit_decode_step,
+    jit_prefill,
+    make_split_serve,
+)
 from repro.runtime import ft, sharding  # noqa: F401

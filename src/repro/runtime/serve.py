@@ -53,8 +53,10 @@ def jit_decode_step(model: Model, mesh, batch: int, max_len: int):
 # ECC split-serve
 # --------------------------------------------------------------------------
 class SplitPrograms(NamedTuple):
-    device_fn: object     # params_A, tokens -> activation (B, S, D)
-    edge_fn: object       # params_B, activation -> logits
+    device_fn: object     # (tokens, frontend=None) -> activation (B, S, D);
+                          # closes over the device-side stage params
+    edge_fn: object       # (activation, frontend=None) -> logits; closes over
+                          # the edge-side stage params + unembed
     split_layer: int
     act_bytes_per_token: int
 
@@ -116,3 +118,48 @@ def transfer_seconds(n_tokens: int, d_model: int, rate_bps: float) -> float:
     """Simulated NOMA uplink time for the split activation."""
     bits = n_tokens * d_model * 16
     return bits / max(rate_bps, 1e-9)
+
+
+# --------------------------------------------------------------------------
+# online split-serve: re-plan as the scenario evolves, re-cut when s* moves
+# --------------------------------------------------------------------------
+class OnlineSplitServer:
+    """Couples a PlannerEngine to split-serve across a time-evolving scenario.
+
+    Every `replan_every` epochs the engine warm-start re-plans against the
+    newly observed NetworkEnv; the (expensive) make_split_serve re-cut only
+    happens when the planned split layer actually moves. `observe(env)`
+    returns the current SplitPrograms.
+
+    model/params may be None for planning-only runs (benchmarks, tests):
+    the re-cut is then recorded but no programs are built.
+    """
+
+    def __init__(self, engine, model: Model | None = None, params=None,
+                 replan_every: int = 1):
+        if replan_every < 1:
+            raise ValueError(f"replan_every must be >= 1, got {replan_every}")
+        self.engine = engine
+        self.model = model
+        self.params = params
+        self.replan_every = replan_every
+        self.state = None               # planning.PlanState of the last re-plan
+        self.programs: SplitPrograms | None = None
+        self.split_layer: int | None = None
+        self.epoch = 0
+        self.recuts = 0
+        self.total_iters = 0
+
+    def observe(self, env) -> SplitPrograms | None:
+        """Advance one epoch: re-plan on schedule, re-cut if s* moved."""
+        if self.epoch % self.replan_every == 0:
+            self.state = self.engine.replan(self.state, env)
+            self.total_iters += int(self.state.total_iters)
+            s = int(self.state.plan.s)
+            if s != self.split_layer:
+                self.split_layer = s
+                self.recuts += 1
+                if self.model is not None:
+                    self.programs = make_split_serve(self.model, self.params, s)
+        self.epoch += 1
+        return self.programs

@@ -1,0 +1,50 @@
+"""User arrival/departure churn with a fixed-size user pool.
+
+The planner's compiled programs are cached per environment *shape*, so churn
+must not change U between epochs. We therefore model Poisson churn as slot
+replacement: departures free a slot that the next arrival immediately reuses.
+Each epoch draws K ~ Poisson(rate * dt) replacement events (approximated per
+user as an independent Bernoulli with the matched mean, exact in the sparse
+regime rate*dt << U); a replaced user gets a fresh position, waypoint, and
+decorrelated fading -- exactly what a new user joining the cell looks like to
+the planner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+from repro.scenarios import fading
+from repro.scenarios.mobility import MobilityState
+
+
+def replacement_mask(key: jax.Array, n_users: int, rate_hz: float,
+                     dt_s: float) -> Array:
+    """(U,) bool: which user slots are replaced this epoch."""
+    p = jnp.clip(rate_hz * dt_s / max(n_users, 1), 0.0, 1.0)
+    return jax.random.bernoulli(key, p, (n_users,))
+
+
+def apply_churn(
+    key: jax.Array,
+    mask: Array,                 # (U,) bool
+    mob: MobilityState,
+    h_up: Array,                 # (U, N, M) complex
+    h_dn: Array,                 # (U, N, M) complex
+    side_m: float,
+) -> tuple[MobilityState, Array, Array]:
+    """Resample position/waypoint/fading for masked slots; others untouched."""
+    k_pos, k_wp, k_up, k_dn = jax.random.split(key, 4)
+    pos_new = jax.random.uniform(k_pos, mob.pos.shape, minval=0.0, maxval=side_m)
+    wp_new = jax.random.uniform(k_wp, mob.waypoint.shape, minval=0.0,
+                                maxval=side_m)
+    m2 = mask[:, None]
+    m3 = mask[:, None, None]
+    mob = MobilityState(
+        pos=jnp.where(m2, pos_new, mob.pos),
+        waypoint=jnp.where(m2, wp_new, mob.waypoint),
+    )
+    h_up = jnp.where(m3, fading.init_coeffs(k_up, h_up.shape), h_up)
+    h_dn = jnp.where(m3, fading.init_coeffs(k_dn, h_dn.shape), h_dn)
+    return mob, h_up, h_dn

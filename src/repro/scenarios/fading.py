@@ -1,0 +1,53 @@
+"""Time-correlated small-scale fading: first-order Gauss-Markov (AR(1))
+evolution of the complex channel coefficients.
+
+The seed's make_env draws i.i.d. Rayleigh fading (|h|^2 ~ Exp(1)) per epoch.
+Here the complex coefficient h ~ CN(0, 1) evolves as
+
+    h[t+1] = rho * h[t] + sqrt(1 - rho^2) * w,   w ~ CN(0, 1)
+
+which keeps the Rayleigh marginal exactly (|h|^2 stays Exp(1)) while giving
+correlation E[h[t+1] h*[t]] = rho between re-planning epochs -- the property
+the online planner's warm start exploits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+
+def init_coeffs(key: jax.Array, shape: tuple[int, ...]) -> Array:
+    """CN(0, 1) coefficients: |h|^2 ~ Exp(1), matching make_env's marginal."""
+    kr, ki = jax.random.split(key)
+    scale = jnp.sqrt(0.5)
+    return (jax.random.normal(kr, shape) * scale
+            + 1j * jax.random.normal(ki, shape) * scale).astype(jnp.complex64)
+
+
+def gauss_markov_step(key: jax.Array, h: Array, rho: float | Array) -> Array:
+    """One AR(1) step; rho in [0, 1] (1 = frozen channel, 0 = i.i.d.)."""
+    w = init_coeffs(key, h.shape)
+    rho = jnp.asarray(rho, dtype=jnp.float32)
+    return rho * h + jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)) * w
+
+
+def power_gain(h: Array) -> Array:
+    """|h|^2 as fp32 (the linear power gain used by the channel model)."""
+    return (h.real * h.real + h.imag * h.imag).astype(jnp.float32)
+
+
+def jakes_rho(doppler_hz: float, dt_s: float) -> float:
+    """Epoch-to-epoch correlation for Jakes' model, rho = J0(2 pi f_d dt).
+
+    Small-argument Bessel series (enough terms for the x <= ~3 regime that
+    matters here), clipped to [0, 1] -- beyond the first J0 zero the channel
+    is effectively decorrelated for warm-start purposes.
+    """
+    x = 2.0 * jnp.pi * doppler_hz * dt_s
+    if x >= 2.405:  # first J0 zero: treat faster motion as fully decorrelated
+        return 0.0
+    x2 = (x / 2.0) ** 2
+    j0 = 1.0 - x2 + x2**2 / 4.0 - x2**3 / 36.0 + x2**4 / 576.0
+    return float(jnp.clip(j0, 0.0, 1.0))

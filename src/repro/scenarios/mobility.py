@@ -1,0 +1,65 @@
+"""User mobility: random-waypoint motion inside the square service area.
+
+Each user moves toward a private waypoint at the scenario speed; on arrival
+(within one epoch's travel distance) a fresh waypoint is drawn. Positions
+drive the large-scale path loss, so mobility couples into the planner through
+slowly-drifting channel gains and occasional nearest-AP handovers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+
+class MobilityState(NamedTuple):
+    pos: Array       # (U, 2) current positions, meters
+    waypoint: Array  # (U, 2) targets
+
+
+def init_positions(
+    key: jax.Array,
+    n_users: int,
+    side_m: float,
+    cluster_frac: float = 0.0,
+    n_clusters: int = 1,
+    cluster_radius_m: float = 30.0,
+) -> Array:
+    """Uniform positions, with an optional fraction packed around hotspot
+    cluster centers (truncated-Gaussian blobs)."""
+    k_u, k_c, k_pick, k_off = jax.random.split(key, 4)
+    uniform = jax.random.uniform(k_u, (n_users, 2), minval=0.0, maxval=side_m)
+    if cluster_frac <= 0.0:
+        return uniform
+    centers = jax.random.uniform(k_c, (n_clusters, 2), minval=0.0, maxval=side_m)
+    which = jax.random.randint(k_pick, (n_users,), 0, n_clusters)
+    offsets = jax.random.normal(k_off, (n_users, 2)) * cluster_radius_m
+    clustered = jnp.clip(centers[which] + offsets, 0.0, side_m)
+    in_cluster = (jnp.arange(n_users) < cluster_frac * n_users)[:, None]
+    return jnp.where(in_cluster, clustered, uniform)
+
+
+def init_state(key: jax.Array, pos: Array, side_m: float) -> MobilityState:
+    wp = jax.random.uniform(key, pos.shape, minval=0.0, maxval=side_m)
+    return MobilityState(pos=pos, waypoint=wp)
+
+
+def waypoint_step(
+    key: jax.Array, state: MobilityState, speed_mps: float, dt_s: float,
+    side_m: float,
+) -> MobilityState:
+    """Advance every user by speed*dt toward its waypoint; re-draw reached
+    waypoints. speed == 0 degenerates to a static scenario."""
+    delta = state.waypoint - state.pos
+    dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
+    travel = speed_mps * dt_s
+    step = jnp.where(dist > 1e-9, delta / jnp.maximum(dist, 1e-9), 0.0) * travel
+    arrived = dist[:, 0] <= travel
+    new_pos = jnp.where(arrived[:, None], state.waypoint, state.pos + step)
+    fresh = jax.random.uniform(key, state.waypoint.shape, minval=0.0,
+                               maxval=side_m)
+    new_wp = jnp.where(arrived[:, None], fresh, state.waypoint)
+    return MobilityState(pos=new_pos, waypoint=new_wp)

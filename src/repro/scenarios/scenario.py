@@ -1,0 +1,137 @@
+"""Time-evolving NOMA network scenarios: the environment generator feeding
+the online PlannerEngine.
+
+A Scenario composes three processes, all with static shapes so every epoch's
+NetworkEnv hits the same compiled solver:
+
+  * Gauss-Markov (AR(1)) Rayleigh fading   -- scenarios.fading
+  * random-waypoint user mobility          -- scenarios.mobility
+  * Poisson slot-replacement churn         -- scenarios.churn
+
+`step` advances one re-planning epoch and emits the NetworkEnv realization;
+`episode` rolls a whole correlated sequence. Epoch 0's env is distributed
+exactly like core.channel.make_env (uniform positions, Exp(1) fading).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import (
+    Array,
+    ComputeConstants,
+    NetworkEnv,
+    RadioConstants,
+)
+from repro.scenarios import churn, fading, mobility
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    """Knobs of a time-evolving deployment. fading_rho overrides the
+    Jakes-derived correlation when set; speed_mps=0 freezes mobility and
+    arrival_rate_hz=0 disables churn."""
+
+    n_users: int = 12
+    n_aps: int = 3
+    n_sub: int = 4
+    epoch_dt_s: float = 0.1
+    doppler_hz: float = 5.0
+    fading_rho: float | None = None
+    speed_mps: float = 1.4
+    arrival_rate_hz: float = 0.0
+    cluster_frac: float = 0.0
+    n_clusters: int = 1
+    cluster_radius_m: float = 30.0
+    radio: RadioConstants = RadioConstants()
+    comp: ComputeConstants = ComputeConstants()
+    name: str = "custom"
+
+    @property
+    def rho(self) -> float:
+        if self.fading_rho is not None:
+            return float(self.fading_rho)
+        return fading.jakes_rho(self.doppler_hz, self.epoch_dt_s)
+
+    @property
+    def side_m(self) -> float:
+        return self.radio.cell_radius_m * max(1.0, self.n_aps**0.5)
+
+
+class ScenarioState(NamedTuple):
+    mob: mobility.MobilityState
+    ap_pos: Array    # (N, 2) fixed for the episode
+    h_up: Array      # (U, N, M) complex64
+    h_dn: Array      # (U, N, M) complex64
+    epoch: Array     # () int32
+
+
+class Scenario:
+    def __init__(self, cfg: ScenarioConfig):
+        self.cfg = cfg
+
+    # -- state ------------------------------------------------------------
+    def init(self, key: jax.Array) -> ScenarioState:
+        cfg = self.cfg
+        k_ap, k_pos, k_wp, k_up, k_dn = jax.random.split(key, 5)
+        ap_pos = jax.random.uniform(k_ap, (cfg.n_aps, 2), minval=0.0,
+                                    maxval=cfg.side_m)
+        pos = mobility.init_positions(
+            k_pos, cfg.n_users, cfg.side_m, cluster_frac=cfg.cluster_frac,
+            n_clusters=cfg.n_clusters, cluster_radius_m=cfg.cluster_radius_m,
+        )
+        mob = mobility.init_state(k_wp, pos, cfg.side_m)
+        shape = (cfg.n_users, cfg.n_aps, cfg.n_sub)
+        return ScenarioState(
+            mob=mob, ap_pos=ap_pos,
+            h_up=fading.init_coeffs(k_up, shape),
+            h_dn=fading.init_coeffs(k_dn, shape),
+            epoch=jnp.int32(0),
+        )
+
+    def step(self, key: jax.Array, state: ScenarioState) -> ScenarioState:
+        cfg = self.cfg
+        k_mob, k_up, k_dn, k_mask, k_churn = jax.random.split(key, 5)
+        mob = mobility.waypoint_step(k_mob, state.mob, cfg.speed_mps,
+                                     cfg.epoch_dt_s, cfg.side_m)
+        rho = cfg.rho
+        h_up = fading.gauss_markov_step(k_up, state.h_up, rho)
+        h_dn = fading.gauss_markov_step(k_dn, state.h_dn, rho)
+        if cfg.arrival_rate_hz > 0.0:
+            mask = churn.replacement_mask(k_mask, cfg.n_users,
+                                          cfg.arrival_rate_hz, cfg.epoch_dt_s)
+            mob, h_up, h_dn = churn.apply_churn(k_churn, mask, mob, h_up,
+                                                h_dn, cfg.side_m)
+        return ScenarioState(mob=mob, ap_pos=state.ap_pos, h_up=h_up,
+                             h_dn=h_dn, epoch=state.epoch + 1)
+
+    # -- realization ------------------------------------------------------
+    def env(self, state: ScenarioState) -> NetworkEnv:
+        """Materialize the NetworkEnv for the current epoch: path loss from
+        positions x Gauss-Markov fading power, nearest-AP association."""
+        cfg = self.cfg
+        d = jnp.linalg.norm(state.mob.pos[:, None, :] - state.ap_pos[None, :, :],
+                            axis=-1)
+        d = jnp.maximum(d, 1.0)
+        path = d ** (-cfg.radio.path_loss_exp)            # (U, N)
+        g_up = path[:, :, None] * fading.power_gain(state.h_up)
+        g_dn = jnp.swapaxes(path[:, :, None] * fading.power_gain(state.h_dn),
+                            0, 1)                          # (N, U, M)
+        ap = jnp.argmax(path, axis=1).astype(jnp.int32)
+        return NetworkEnv(g_up=g_up, g_dn=g_dn, ap=ap, radio=cfg.radio,
+                          comp=cfg.comp)
+
+    def episode(self, key: jax.Array, n_epochs: int) -> Iterator[NetworkEnv]:
+        """Yield n_epochs correlated NetworkEnv realizations."""
+        k_init, key = jax.random.split(key)
+        state = self.init(k_init)
+        for _ in range(n_epochs):
+            yield self.env(state)
+            k_step, key = jax.random.split(key)
+            state = self.step(k_step, state)
+
+    def episode_list(self, key: jax.Array, n_epochs: int) -> list[NetworkEnv]:
+        return list(self.episode(key, n_epochs))

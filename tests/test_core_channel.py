@@ -1,55 +1,17 @@
-"""NOMA channel model invariants (paper eqs. 5-10)."""
+"""NOMA channel model invariants (paper eqs. 5-10). Property-based variants
+live in test_core_channel_props.py (optional 'hypothesis' dep)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import channel, make_env
 
 
-def _vars(env, key, onehot=False):
-    ku, kd, kp, kq = jax.random.split(key, 4)
-    u, m = env.n_users, env.n_sub
-    if onehot:
-        beta_up = jax.nn.one_hot(jax.random.randint(ku, (u,), 0, m), m)
-        beta_dn = jax.nn.one_hot(jax.random.randint(kd, (u,), 0, m), m)
-    else:
-        beta_up = jax.random.dirichlet(ku, jnp.ones(m), (u,))
-        beta_dn = jax.random.dirichlet(kd, jnp.ones(m), (u,))
-    p_up = jax.random.uniform(kp, (u,), minval=1e-3, maxval=0.3)
-    p_dn = jax.random.uniform(kq, (u,), minval=0.1, maxval=10.0)
-    return beta_up, beta_dn, p_up, p_dn
-
-
-@settings(deadline=None, max_examples=20)
-@given(seed=st.integers(0, 2**31 - 1), onehot=st.booleans())
-def test_rates_finite_nonneg(seed, onehot):
-    key = jax.random.PRNGKey(seed)
-    env = make_env(key, n_users=6, n_aps=2, n_sub=3)
-    bu, bd, pu, pd = _vars(env, key, onehot)
-    ru = channel.uplink_rates(env, bu, pu)
-    rd = channel.downlink_rates(env, bd, pd)
-    for r in (ru, rd):
-        assert bool(jnp.all(jnp.isfinite(r)))
-        assert bool(jnp.all(r >= 0.0))
-
-
-@settings(deadline=None, max_examples=20)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_own_power_monotone(seed):
-    """Raising my tx power (others fixed) cannot lower my uplink SINR."""
-    key = jax.random.PRNGKey(seed)
-    env = make_env(key, n_users=6, n_aps=2, n_sub=3)
-    bu, _, pu, _ = _vars(env, key)
-    s0 = channel.uplink_sinr(env, bu, pu)
-    pu2 = pu.at[0].mul(2.0)
-    s1 = channel.uplink_sinr(env, bu, pu2)
-    assert bool(jnp.all(s1[0] >= s0[0] - 1e-9))
-
-
-def test_sic_strongest_user_no_intra(small_env):
-    """The same-cell user with the largest own-gain on subchannel m sees no
-    intra-cell interference there (it is decoded first)."""
+def test_sic_weakest_user_no_intra(small_env):
+    """Uplink SIC decodes stronger users first (paper eq. 5): the same-cell
+    user with the *smallest* own-gain on subchannel m is decoded last, after
+    every same-cell interferer has been cancelled, so it sees no intra-cell
+    interference there."""
     env = small_env
     u, m = env.n_users, env.n_sub
     beta = jnp.ones((u, m)) / m
@@ -58,16 +20,16 @@ def test_sic_strongest_user_no_intra(small_env):
     sinr = channel.uplink_sinr(env, beta, p)
     # isolate cell 0, subchannel 0
     cell0 = env.ap == 0
-    gains = jnp.where(cell0, own[:, 0], -jnp.inf)
-    top = int(jnp.argmax(gains))
-    # reconstruct: signal / (inter + noise) for top user should equal sinr
-    inter_plus_noise = p[top] * own[top, 0] / sinr[top, 0]
+    gains = jnp.where(cell0, own[:, 0], jnp.inf)
+    bottom = int(jnp.argmin(gains))
+    # reconstruct: signal / (inter + noise) for bottom user should equal sinr
+    inter_plus_noise = p[bottom] * own[bottom, 0] / sinr[bottom, 0]
     # remove noise, left = inter-cell only; verify no same-cell term by
     # zeroing other cells' power -> sinr should hit p*g/noise exactly.
     p_zero = jnp.where(cell0, p, 0.0)
     sinr_iso = channel.uplink_sinr(env, beta, p_zero)
-    expected = p[top] * own[top, 0] / env.noise_up
-    assert float(jnp.abs(sinr_iso[top, 0] - expected) / expected) < 1e-4
+    expected = p[bottom] * own[bottom, 0] / env.noise_up
+    assert float(jnp.abs(sinr_iso[bottom, 0] - expected) / expected) < 1e-4
     assert float(inter_plus_noise) >= float(env.noise_up) * 0.99
 
 

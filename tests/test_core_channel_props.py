@@ -1,0 +1,50 @@
+"""Property-based NOMA channel invariants (optional 'hypothesis' dep)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional "
+                    "'hypothesis' dev dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel, make_env
+
+
+def _vars(env, key, onehot=False):
+    ku, kd, kp, kq = jax.random.split(key, 4)
+    u, m = env.n_users, env.n_sub
+    if onehot:
+        beta_up = jax.nn.one_hot(jax.random.randint(ku, (u,), 0, m), m)
+        beta_dn = jax.nn.one_hot(jax.random.randint(kd, (u,), 0, m), m)
+    else:
+        beta_up = jax.random.dirichlet(ku, jnp.ones(m), (u,))
+        beta_dn = jax.random.dirichlet(kd, jnp.ones(m), (u,))
+    p_up = jax.random.uniform(kp, (u,), minval=1e-3, maxval=0.3)
+    p_dn = jax.random.uniform(kq, (u,), minval=0.1, maxval=10.0)
+    return beta_up, beta_dn, p_up, p_dn
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), onehot=st.booleans())
+def test_rates_finite_nonneg(seed, onehot):
+    key = jax.random.PRNGKey(seed)
+    env = make_env(key, n_users=6, n_aps=2, n_sub=3)
+    bu, bd, pu, pd = _vars(env, key, onehot)
+    ru = channel.uplink_rates(env, bu, pu)
+    rd = channel.downlink_rates(env, bd, pd)
+    for r in (ru, rd):
+        assert bool(jnp.all(jnp.isfinite(r)))
+        assert bool(jnp.all(r >= 0.0))
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_own_power_monotone(seed):
+    """Raising my tx power (others fixed) cannot lower my uplink SINR."""
+    key = jax.random.PRNGKey(seed)
+    env = make_env(key, n_users=6, n_aps=2, n_sub=3)
+    bu, _, pu, _ = _vars(env, key)
+    s0 = channel.uplink_sinr(env, bu, pu)
+    pu2 = pu.at[0].mul(2.0)
+    s1 = channel.uplink_sinr(env, bu, pu2)
+    assert bool(jnp.all(s1[0] >= s0[0] - 1e-9))

@@ -1,9 +1,10 @@
-"""Li-GD optimizer: projections, convergence, Corollary 2/4 behaviour."""
+"""Li-GD optimizer: projections, convergence, Corollary 2/4 behaviour.
+Property-based variants live in test_core_ligd_props.py (optional
+'hypothesis' dep)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     GdConfig,
@@ -21,19 +22,6 @@ from repro.core import (
 )
 from repro.core.li_gd import _project
 from repro.core.utility import utility
-
-
-@settings(deadline=None, max_examples=30)
-@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 12))
-def test_simplex_projection(seed, m):
-    y = jax.random.normal(jax.random.PRNGKey(seed), (5, m)) * 3.0
-    floor = 1e-3
-    x = project_simplex_floor(y, floor)
-    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
-    assert bool(jnp.all(x >= floor - 1e-6))
-    # idempotent
-    x2 = project_simplex_floor(x, floor)
-    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-5)
 
 
 def test_gd_decreases_utility(small_env, weights, gd_cfg):
@@ -120,15 +108,15 @@ def test_rounding_violation_counter(small_env, weights, gd_cfg):
     assert 0 <= v <= 2 * small_env.n_users
 
 
-def test_plan_batch_matches_sequential(small_env, weights, gd_cfg):
+def test_plan_many_matches_sequential(small_env, weights, gd_cfg):
     """vmapped batched Li-GD == per-env solve (beyond-paper batching)."""
-    import jax
-    from repro.core import make_env, planner, profiles
+    from repro.core import make_env, profiles
+    from repro.planning import PlannerEngine
     envs = [make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in (0, 1)]
     prof = profiles.nin()
-    stacked = planner.stack_envs(envs)
-    batched = planner.plan_batch(stacked, prof, weights, gd_cfg)
+    engine = PlannerEngine(prof, weights=weights, cfg=gd_cfg)
+    batched = engine.plan_many(envs)
     for i, env in enumerate(envs):
         single = solve(env, prof, weights, gd_cfg)
-        assert int(batched.s[i]) == int(single.s)
-        assert abs(float(batched.utility[i]) - float(single.utility)) < 1e-4
+        assert int(batched.plan.s[i]) == int(single.s)
+        assert abs(float(batched.plan.utility[i]) - float(single.utility)) < 1e-4

@@ -1,0 +1,24 @@
+"""Property-based Li-GD projection invariants (optional 'hypothesis' dep)."""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional "
+                    "'hypothesis' dev dependency")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import project_simplex_floor
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 12))
+def test_simplex_projection(seed, m):
+    y = jax.random.normal(jax.random.PRNGKey(seed), (5, m)) * 3.0
+    floor = 1e-3
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
+    assert bool(jnp.all(x >= floor - 1e-6))
+    # idempotent
+    x2 = project_simplex_floor(x, floor)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-5)

@@ -1,0 +1,170 @@
+"""PlannerEngine: unified single-shot / batched / online warm-start planning,
+plus the simplex-projection edge cases the solver relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GdConfig,
+    make_env,
+    make_weights,
+    profiles,
+    project_simplex_floor,
+    solve,
+)
+from repro.planning import PlannerEngine, PlanState, stack_envs
+from repro.scenarios import Scenario, ScenarioConfig
+
+
+ADAM_CFG = GdConfig(step_size=1e-2, eps=1e-4, max_iters=400, optimizer="adam")
+
+
+@pytest.fixture(scope="module")
+def engine(weights, gd_cfg):
+    return PlannerEngine(profiles.nin(), weights=weights, cfg=gd_cfg)
+
+
+# -- simplex projection edge cases (floors) --------------------------------
+def test_simplex_floor_row_below_floor():
+    """A row entirely below the floor must be lifted onto the floored simplex."""
+    floor = 0.05
+    y = jnp.full((3, 4), -2.0)
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-6)
+    assert bool(jnp.all(x >= floor - 1e-6))
+    # symmetric input -> uniform output
+    np.testing.assert_allclose(np.asarray(x), 0.25, atol=1e-6)
+
+
+def test_simplex_floor_tight_budget():
+    """m * floor ~ 1: almost no slack, projection must pin every entry at
+    (approximately) the floor without going negative or overshooting."""
+    m, floor = 4, 0.2499
+    y = jax.random.normal(jax.random.PRNGKey(0), (5, m)) * 10.0
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
+    assert bool(jnp.all(x >= floor - 1e-6))
+    assert bool(jnp.all(x <= floor + (1.0 - m * floor) + 1e-5))
+
+
+def test_simplex_floor_exact_budget():
+    """m * floor == 1 exactly: the floored simplex is the single point
+    x = floor * ones."""
+    m = 5
+    floor = 1.0 / m
+    y = jax.random.normal(jax.random.PRNGKey(1), (3, m)) * 3.0
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.asarray(x), floor, atol=1e-6)
+
+
+# -- engine entry points ---------------------------------------------------
+def test_engine_plan_matches_solve(small_env, weights, gd_cfg, engine):
+    state = engine.plan(small_env)
+    ref = solve(small_env, profiles.nin(), weights, gd_cfg)
+    assert isinstance(state, PlanState)
+    assert int(state.plan.s) == int(ref.s)
+    assert float(state.plan.utility) == pytest.approx(float(ref.utility), abs=1e-6)
+    # norms carry one optimum per split point for the next epoch's warm start
+    assert state.norms["beta_up"].shape[0] == profiles.nin().n_layers + 1
+
+
+def test_engine_plan_many_matches_sequential(weights, gd_cfg, engine):
+    envs = [make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in (0, 1, 2)]
+    batched = engine.plan_many(envs)
+    assert batched.plan.s.shape == (3,)
+    for i, env in enumerate(envs):
+        single = solve(env, profiles.nin(), weights, gd_cfg)
+        assert int(batched.plan.s[i]) == int(single.s)
+        assert float(batched.plan.utility[i]) == pytest.approx(
+            float(single.utility), abs=1e-4)
+
+
+def test_engine_plan_many_accepts_stacked(weights, gd_cfg, engine):
+    envs = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in (3, 4)])
+    out = engine.plan_many(envs)
+    assert out.plan.s.shape == (2,)
+
+
+def test_engine_cache_reuse(gd_cfg):
+    eng = PlannerEngine(profiles.nin(), cfg=gd_cfg)  # weights derived per env
+    e1 = make_env(jax.random.PRNGKey(0), 8, 2, 4)
+    e2 = make_env(jax.random.PRNGKey(1), 8, 2, 4)
+    eng.plan(e1)
+    eng.plan(e2)
+    assert eng.cache_size() == 1          # same shape -> one compiled program
+    eng.plan(make_env(jax.random.PRNGKey(2), 6, 2, 3))
+    assert eng.cache_size() == 2          # new shape -> new program
+
+
+def test_replan_identical_env_warm_equivalence(small_env):
+    """Warm-start replan on an unchanged env must not need more iterations
+    than the fresh plan, and must land on an optimum at least as good."""
+    w = make_weights(small_env.n_users)
+    eng = PlannerEngine(profiles.nin(), weights=w, cfg=ADAM_CFG)
+    fresh = eng.plan(small_env)
+    warm = eng.replan(fresh, small_env)
+    assert int(warm.total_iters) <= int(fresh.total_iters)
+    assert float(warm.plan.utility) <= float(fresh.plan.utility) + 1e-4
+    assert int(warm.plan.s) == int(fresh.plan.s)
+
+
+def test_replan_none_falls_back_to_plan(small_env, weights, gd_cfg, engine):
+    state = engine.replan(None, small_env)
+    ref = engine.plan(small_env)
+    assert int(state.plan.s) == int(ref.plan.s)
+    assert float(state.plan.utility) == pytest.approx(float(ref.plan.utility),
+                                                      abs=1e-6)
+
+
+def test_online_episode_warm_beats_cold():
+    """Acceptance: across a >= 10-epoch correlated-fading episode, online
+    warm-start re-planning spends strictly fewer total GD iterations than
+    cold re-planning, without giving up solution quality."""
+    scfg = ScenarioConfig(n_users=8, n_aps=2, n_sub=4, fading_rho=0.995,
+                          speed_mps=0.0, arrival_rate_hz=0.0)
+    w = make_weights(scfg.n_users)
+    prof = profiles.nin()
+    warm_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    cold_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    sc = Scenario(scfg)
+    state = None
+    cold_total = warm_total = 0
+    cold_util = warm_util = 0.0
+    for t, env in enumerate(sc.episode(jax.random.PRNGKey(0), 12)):
+        cold = cold_eng.plan(env)
+        state = warm_eng.replan(state, env)
+        if t >= 1:  # epoch 0 is cold for both
+            cold_total += int(cold.total_iters)
+            warm_total += int(state.total_iters)
+            cold_util += float(cold.plan.utility)
+            warm_util += float(state.plan.utility)
+    assert warm_total < cold_total
+    assert warm_util <= cold_util * 1.05
+
+
+def test_engine_rejects_unknown_method():
+    with pytest.raises(KeyError):
+        PlannerEngine(profiles.nin(), method="newton")
+
+
+# -- online serving hook ---------------------------------------------------
+def test_online_split_server_replan_schedule(small_env):
+    from repro.runtime.serve import OnlineSplitServer
+
+    w = make_weights(small_env.n_users)
+    eng = PlannerEngine(profiles.nin(), weights=w, cfg=ADAM_CFG)
+    srv = OnlineSplitServer(eng, replan_every=2)
+    scfg = ScenarioConfig(n_users=8, n_aps=2, n_sub=4, fading_rho=0.99,
+                          speed_mps=0.0, arrival_rate_hz=0.0)
+    sc = Scenario(scfg)
+    for env in sc.episode(jax.random.PRNGKey(1), 5):
+        srv.observe(env)
+    assert srv.epoch == 5
+    # replans at epochs 0, 2, 4; the first one must have re-cut
+    assert srv.state is not None
+    assert 1 <= srv.recuts <= 3
+    assert srv.split_layer == int(srv.state.plan.s)
+    assert srv.total_iters > 0
+    with pytest.raises(ValueError):
+        OnlineSplitServer(eng, replan_every=0)

@@ -1,0 +1,112 @@
+"""Scenario subsystem: correlated fading, mobility, churn, presets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.scenarios import Scenario, ScenarioConfig, fading, mobility, presets
+
+
+def _static_cfg(**kw):
+    base = dict(n_users=8, n_aps=2, n_sub=4, speed_mps=0.0,
+                arrival_rate_hz=0.0)
+    base.update(kw)
+    return ScenarioConfig(**base)
+
+
+def test_episode_static_shapes_and_finite():
+    sc = Scenario(_static_cfg(fading_rho=0.9))
+    envs = sc.episode_list(jax.random.PRNGKey(0), 4)
+    assert len(envs) == 4
+    for env in envs:
+        assert env.g_up.shape == (8, 2, 4)
+        assert env.g_dn.shape == (2, 8, 4)
+        assert bool(jnp.all(jnp.isfinite(env.g_up))) and bool(jnp.all(env.g_up > 0))
+        assert bool(jnp.all((env.ap >= 0) & (env.ap < 2)))
+
+
+def test_fading_marginal_is_rayleigh():
+    """|h|^2 of the CN(0,1) coefficients is Exp(1): mean 1, matching the
+    i.i.d. fading that make_env draws."""
+    h = fading.init_coeffs(jax.random.PRNGKey(0), (64, 4, 16))
+    g = fading.power_gain(h)
+    assert float(jnp.mean(g)) == pytest.approx(1.0, abs=0.08)
+    # AR(1) step preserves the marginal
+    h2 = fading.gauss_markov_step(jax.random.PRNGKey(1), h, 0.7)
+    assert float(jnp.mean(fading.power_gain(h2))) == pytest.approx(1.0, abs=0.08)
+
+
+def test_fading_correlation_tracks_rho():
+    """corr(|h_t|^2, |h_{t+1}|^2) = rho^2 for the Gauss-Markov process."""
+    key = jax.random.PRNGKey(2)
+    h = fading.init_coeffs(key, (128, 4, 16))
+    for rho, lo, hi in ((0.98, 0.90, 1.0), (0.0, -0.15, 0.15)):
+        h2 = fading.gauss_markov_step(jax.random.PRNGKey(3), h, rho)
+        g1 = np.asarray(fading.power_gain(h)).ravel()
+        g2 = np.asarray(fading.power_gain(h2)).ravel()
+        corr = float(np.corrcoef(g1, g2)[0, 1])
+        assert lo <= corr <= hi, (rho, corr)
+
+
+def test_jakes_rho_limits():
+    assert fading.jakes_rho(0.0, 0.1) == pytest.approx(1.0)
+    r_slow = fading.jakes_rho(1.0, 0.1)
+    r_fast = fading.jakes_rho(50.0, 0.1)
+    assert 0.0 <= r_fast < r_slow <= 1.0
+
+
+def test_mobility_stays_in_area_and_moves():
+    cfg = _static_cfg(speed_mps=10.0, fading_rho=1.0)
+    sc = Scenario(cfg)
+    state = sc.init(jax.random.PRNGKey(0))
+    p0 = state.mob.pos
+    for i in range(5):
+        state = sc.step(jax.random.PRNGKey(10 + i), state)
+        assert bool(jnp.all((state.mob.pos >= 0.0) & (state.mob.pos <= cfg.side_m)))
+    assert float(jnp.max(jnp.abs(state.mob.pos - p0))) > 0.0
+
+
+def test_static_scenario_is_static():
+    """speed 0, churn 0, rho 1 -> the environment does not change at all."""
+    sc = Scenario(_static_cfg(fading_rho=1.0))
+    state = sc.init(jax.random.PRNGKey(0))
+    e0 = sc.env(state)
+    state = sc.step(jax.random.PRNGKey(1), state)
+    e1 = sc.env(state)
+    np.testing.assert_allclose(np.asarray(e0.g_up), np.asarray(e1.g_up), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(e0.ap), np.asarray(e1.ap))
+
+
+def test_churn_replaces_users():
+    cfg = _static_cfg(arrival_rate_hz=1e4, epoch_dt_s=1.0, fading_rho=1.0)
+    sc = Scenario(cfg)
+    state = sc.init(jax.random.PRNGKey(0))
+    p0 = np.asarray(state.mob.pos)
+    state = sc.step(jax.random.PRNGKey(1), state)
+    moved = np.any(np.abs(np.asarray(state.mob.pos) - p0) > 1e-6, axis=-1)
+    assert moved.all()  # rate*dt >> U: every slot replaced
+
+
+def test_hotspot_clustering_concentrates_users():
+    cfg = ScenarioConfig(n_users=32, n_aps=2, n_sub=4, cluster_frac=1.0,
+                         n_clusters=1, cluster_radius_m=10.0, speed_mps=0.0)
+    uni = ScenarioConfig(n_users=32, n_aps=2, n_sub=4, cluster_frac=0.0,
+                         speed_mps=0.0)
+    key = jax.random.PRNGKey(4)
+    pos_c = Scenario(cfg).init(key).mob.pos
+    pos_u = Scenario(uni).init(key).mob.pos
+    spread = lambda p: float(jnp.mean(jnp.linalg.norm(p - jnp.mean(p, 0), axis=-1)))
+    assert spread(pos_c) < spread(pos_u) * 0.5
+
+
+def test_presets_generate_valid_episodes():
+    assert set(presets.names()) == {"dense_urban", "highway", "hotspot",
+                                    "iot_massive"}
+    for name in presets.names():
+        cfg = presets.get(name)
+        assert 0.0 <= cfg.rho <= 1.0
+        sc = Scenario(cfg)
+        env = next(sc.episode(jax.random.PRNGKey(5), 1))
+        assert env.g_up.shape == (cfg.n_users, cfg.n_aps, cfg.n_sub)
+    with pytest.raises(KeyError):
+        presets.get("metaverse")

@@ -16,8 +16,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def make_mesh(shape, axes):
-    # AbstractMesh: rule resolution only needs mesh.shape (1 real device here)
-    return jax.sharding.AbstractMesh(shape, axes)
+    # AbstractMesh: rule resolution only needs mesh.shape (1 real device here).
+    # jax < 0.5 takes a single ((name, size), ...) tuple instead of (shape, axes).
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_spec_for_divisibility():
@@ -73,6 +77,8 @@ def test_mini_dryrun_subprocess():
             lowered = make(specs).lower(state_shapes, specs)
             compiled = lowered.compile()
         ca = compiled.cost_analysis()
+        if isinstance(ca, list):  # jax < 0.5: one dict per program
+            ca = ca[0]
         hlo = parse_hlo(compiled.as_text())
         print(json.dumps({
             "flops": ca.get("flops", 0.0),
