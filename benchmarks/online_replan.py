@@ -1,31 +1,100 @@
-"""Online re-planning benchmark: warm vs cold GD iterations across a
-time-correlated fading episode (Corollary 4's warm-start argument applied
+"""Online re-planning benchmark: warm vs cold GD iterations across
+time-correlated fading episodes (Corollary 4's warm-start argument applied
 across time instead of across split points).
 
-For every epoch of a scenario episode we solve the full split-point sweep
-twice: cold (a fresh Li-GD plan, as the paper would re-run per realization)
-and warm (PlannerEngine.replan, starting every split from the previous
-epoch's normalized optimum). Reported: per-epoch iteration counts, totals,
-and the chosen split trajectory.
+Default mode sweeps the epoch-to-epoch fading correlation rho over a *fleet*
+of scenarios evolving in parallel: every epoch the whole fleet is solved
+twice -- cold (PlannerEngine.plan_many, a fresh Li-GD plan per member, as the
+paper would re-run per realization) and warm (PlannerEngine.replan_many, each
+split point resuming the previous epoch's optimum + Adam state when it beats
+the fresh chain carry). One compiled program serves every rho level because
+the fleet shapes are static. --verify additionally re-plans each member
+sequentially with PlannerEngine.replan and checks the batched path agrees.
 
-  PYTHONPATH=src python benchmarks/online_replan.py --preset iot_massive
+  PYTHONPATH=src python benchmarks/online_replan.py
+  PYTHONPATH=src python benchmarks/online_replan.py --rhos 0.9 0.99 0.999 --fleet 8
+  PYTHONPATH=src python benchmarks/online_replan.py --preset iot_massive --episode
+  PYTHONPATH=src python benchmarks/online_replan.py --quick   # CI smoke
+
+--episode keeps PR 1's single-scenario preset episode mode (plan vs replan
+per epoch on one correlated trajectory).
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import GdConfig, make_weights, profiles
-from repro.planning import PlannerEngine
-from repro.scenarios import Scenario, presets
+from repro.planning import PlannerEngine, member
+from repro.scenarios import Scenario, ScenarioConfig, presets
+
+
+def _profile(name: str):
+    return {"nin": profiles.nin, "vgg16": profiles.vgg16,
+            "yolov2": profiles.yolov2}[name]()
+
+
+def run_sweep(rhos, fleet, n_epochs, seed, prof_name, cfg, scfg,
+              verify=False) -> list[dict]:
+    prof = _profile(prof_name)
+    w = make_weights(scfg.n_users)
+    warm_eng = PlannerEngine(prof, weights=w, cfg=cfg)
+    cold_eng = PlannerEngine(prof, weights=w, cfg=cfg)
+    seq_eng = PlannerEngine(prof, weights=w, cfg=cfg)
+    sc = Scenario(scfg)
+
+    out = []
+    for rho in rhos:
+        keys = jax.random.split(jax.random.PRNGKey(seed), fleet)
+        states = sc.init_many(keys)
+        fleet_state, seq_states = None, [None] * fleet
+        cold_it = warm_it = 0
+        cold_util = warm_util = 0.0
+        mismatches = 0
+        key = jax.random.PRNGKey(seed + 1)
+        for t in range(n_epochs):
+            envs = sc.env_many(states)
+            # epoch 0 is cold for both engines (replan_many(None) == plan_many),
+            # so the cold baseline is only solved for the counted epochs
+            cold = cold_eng.plan_many(envs) if t >= 1 else None
+            fleet_state = warm_eng.replan_many(fleet_state, envs)
+            if verify:
+                for i in range(fleet):
+                    seq_states[i] = seq_eng.replan(seq_states[i],
+                                                   member(envs, i))
+                    same_s = int(seq_states[i].plan.s) == int(fleet_state.plan.s[i])
+                    du = abs(float(seq_states[i].plan.utility)
+                             - float(fleet_state.plan.utility[i]))
+                    di = abs(int(seq_states[i].total_iters)
+                             - int(fleet_state.total_iters[i]))
+                    # di tolerance: vmap may reorder reductions in the last
+                    # ulp, nudging a stopping rule by an iteration or two
+                    if not same_s or du > 1e-4 or di > 2:
+                        mismatches += 1
+            if t >= 1:  # epoch 0 is cold for both engines
+                cold_it += int(jnp.sum(cold.total_iters))
+                warm_it += int(jnp.sum(fleet_state.total_iters))
+                cold_util += float(jnp.sum(cold.plan.utility))
+                warm_util += float(jnp.sum(fleet_state.plan.utility))
+            key, k_step = jax.random.split(key)
+            step_keys = jax.random.split(k_step, fleet)
+            states = sc.step_many(step_keys, states,
+                                  rho=jnp.full((fleet,), rho))
+        out.append({
+            "rho": rho, "fleet": fleet, "epochs": n_epochs,
+            "cold_iters": cold_it, "warm_iters": warm_it,
+            "cold_util": cold_util, "warm_util": warm_util,
+            "mismatches": mismatches if verify else None,
+        })
+    return out
 
 
 def run_episode(preset: str, n_epochs: int, seed: int, prof_name: str,
                 cfg: GdConfig) -> dict:
     scfg = presets.get(preset)
-    prof = {"nin": profiles.nin, "vgg16": profiles.vgg16,
-            "yolov2": profiles.yolov2}[prof_name]()
+    prof = _profile(prof_name)
     w = make_weights(scfg.n_users)
     warm_eng = PlannerEngine(prof, weights=w, cfg=cfg)
     cold_eng = PlannerEngine(prof, weights=w, cfg=cfg)
@@ -49,32 +118,77 @@ def run_episode(preset: str, n_epochs: int, seed: int, prof_name: str,
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--preset", default="iot_massive", choices=presets.names())
-    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--rhos", type=float, nargs="+",
+                    default=[0.9, 0.99, 0.999])
+    ap.add_argument("--fleet", type=int, default=8)
+    ap.add_argument("--users", type=int, default=8)
+    ap.add_argument("--aps", type=int, default=2)
+    ap.add_argument("--subs", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--profile", default="nin", choices=("nin", "vgg16", "yolov2"))
     ap.add_argument("--step-size", type=float, default=1e-2)
-    ap.add_argument("--eps", type=float, default=1e-5)
-    ap.add_argument("--max-iters", type=int, default=400)
+    ap.add_argument("--eps", type=float, default=1e-4)
+    ap.add_argument("--max-iters", type=int, default=200)
+    ap.add_argument("--verify", action="store_true",
+                    help="check replan_many against sequential replan")
+    ap.add_argument("--episode", action="store_true",
+                    help="single-scenario preset episode mode (PR 1 report)")
+    ap.add_argument("--preset", default="iot_massive", choices=presets.names())
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny fleet, 3 epochs, one rho, --verify")
     args = ap.parse_args()
 
     cfg = GdConfig(step_size=args.step_size, eps=args.eps,
                    max_iters=args.max_iters, optimizer="adam")
-    out = run_episode(args.preset, args.epochs, args.seed, args.profile, cfg)
 
-    print(f"preset={out['preset']}  epoch-to-epoch fading rho={out['rho']:.4f}")
-    print(f"{'epoch':>5} {'cold_it':>8} {'warm_it':>8} {'s_cold':>6} {'s_warm':>6}"
-          f" {'util_cold':>10} {'util_warm':>10}")
-    for r in out["rows"]:
-        print(f"{r['epoch']:5d} {r['cold_iters']:8d} {r['warm_iters']:8d}"
-              f" {r['cold_s']:6d} {r['warm_s']:6d}"
-              f" {r['cold_util']:10.4f} {r['warm_util']:10.4f}")
-    # epoch 0 is cold for both engines; the online gain is epochs >= 1
-    cold_total = sum(r["cold_iters"] for r in out["rows"][1:])
-    warm_total = sum(r["warm_iters"] for r in out["rows"][1:])
-    print(f"\ntotals (epochs 1..{len(out['rows']) - 1}): "
-          f"cold={cold_total}  warm={warm_total}  "
-          f"reduction={100.0 * (1 - warm_total / max(cold_total, 1)):.1f}%")
+    if args.episode:
+        out = run_episode(args.preset, args.epochs, args.seed, args.profile, cfg)
+        print(f"preset={out['preset']}  epoch-to-epoch fading rho={out['rho']:.4f}")
+        print(f"{'epoch':>5} {'cold_it':>8} {'warm_it':>8} {'s_cold':>6} {'s_warm':>6}"
+              f" {'util_cold':>10} {'util_warm':>10}")
+        for r in out["rows"]:
+            print(f"{r['epoch']:5d} {r['cold_iters']:8d} {r['warm_iters']:8d}"
+                  f" {r['cold_s']:6d} {r['warm_s']:6d}"
+                  f" {r['cold_util']:10.4f} {r['warm_util']:10.4f}")
+        # epoch 0 is cold for both engines; the online gain is epochs >= 1
+        cold_total = sum(r["cold_iters"] for r in out["rows"][1:])
+        warm_total = sum(r["warm_iters"] for r in out["rows"][1:])
+        print(f"\ntotals (epochs 1..{len(out['rows']) - 1}): "
+              f"cold={cold_total}  warm={warm_total}  "
+              f"reduction={100.0 * (1 - warm_total / max(cold_total, 1)):.1f}%")
+        return
+
+    rhos, fleet, epochs, verify = (args.rhos, args.fleet, args.epochs,
+                                   args.verify)
+    if args.quick:
+        rhos, fleet, epochs, verify = [0.95], 4, 3, True
+    scfg = ScenarioConfig(n_users=args.users, n_aps=args.aps, n_sub=args.subs,
+                          speed_mps=0.0, arrival_rate_hz=0.0)
+    rows = run_sweep(rhos, fleet, epochs, args.seed, args.profile, cfg, scfg,
+                     verify=verify)
+    print(f"fleet={fleet} x {epochs} epochs, U={args.users} N={args.aps} "
+          f"M={args.subs}, profile={args.profile} (totals over epochs >= 1)")
+    print(f"{'rho':>7} {'cold_it':>9} {'warm_it':>9} {'saved':>7} "
+          f"{'util_cold':>11} {'util_warm':>11}" + ("  mismatch" if verify else ""))
+    ok = True
+    for r in rows:
+        saved = 100.0 * (1 - r["warm_iters"] / max(r["cold_iters"], 1))
+        line = (f"{r['rho']:7.3f} {r['cold_iters']:9d} {r['warm_iters']:9d}"
+                f" {saved:6.1f}% {r['cold_util']:11.4f} {r['warm_util']:11.4f}")
+        if verify:
+            line += f"  {r['mismatches']:8d}"
+            ok = ok and r["mismatches"] == 0
+        print(line)
+        ok = ok and r["warm_iters"] <= r["cold_iters"]
+        # acceptance is iterations saved at equal-or-better utility (cost:
+        # lower is better); 1% headroom absorbs plateau-stopping noise
+        ok = ok and r["warm_util"] <= r["cold_util"] * 1.01
+    if verify and not ok:
+        raise SystemExit("FAIL: warm > cold iterations, warm utility worse "
+                         "than cold, or batched/sequential replan mismatch")
+    print("OK" if ok else "WARN: warm lost to cold (iterations or utility) "
+          "somewhere")
 
 
 if __name__ == "__main__":

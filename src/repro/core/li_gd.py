@@ -11,11 +11,22 @@ Design notes
 * Gradients come from jax.grad of the utility (paper derives them by hand in
   eqs. 23-30; autodiff computes the same derivatives exactly).
 * The per-split-point solve is a lax.while_loop with the paper's stopping
-  rules (Table I lines 6/9): ||g|| < eps, |Gamma_{k+1}-Gamma_k| < eps, or
-  max variable change < eps, capped at max_iters.
+  rules (Table I lines 6/9): a gradient criterion, |Gamma_{k+1}-Gamma_k| <
+  eps, or max variable change < eps, capped at max_iters. The gradient
+  criterion is configurable (GdConfig.stop_rule): the paper's raw ||g|| < eps
+  never fires at a *constrained* optimum (the gradient does not vanish on the
+  simplex/box boundary, it only becomes normal to the feasible set), so the
+  default is the projected-gradient residual ||x - P(x - alpha*g)|| / alpha,
+  which is zero exactly at a KKT point of the constrained problem.
 * Li-GD chains split points via lax.scan, warm-starting layer s+1 from the
   optimum of layer s (Table I lines 13-16). plain_gd is the cold-start
   baseline used to validate Corollary 4 (iteration-count reduction).
+* Online (cross-epoch) warm starts can resume the Adam state: gd_solve
+  accepts and returns the first/second moments and the cumulative step count
+  (for bias correction), so a re-plan continues the optimizer trajectory
+  instead of re-biasing from zero -- without this, sign-like early Adam steps
+  near the previous optimum defeat early stopping and warm starts can *lose*
+  to cold starts at moderate epoch-to-epoch correlation.
 """
 from __future__ import annotations
 
@@ -53,10 +64,16 @@ def project_simplex(y: Array, total: float = 1.0) -> Array:
 
 
 def project_simplex_floor(y: Array, floor: float) -> Array:
-    """Projection onto {x >= floor, sum x = 1} (rows)."""
+    """Projection onto {x >= floor, sum x = 1} (rows).
+
+    The floored simplex is nonempty only when m * floor <= 1 (Corollary 1's
+    feasibility condition beta_min <= 1/M). A larger floor is clamped to 1/m
+    -- the set then degenerates to the single point x = ones/m -- instead of
+    silently producing sum(x) != 1 from a negative residual budget."""
     m = y.shape[-1]
-    z = project_simplex(y - floor, total=1.0 - m * floor)
-    return z + floor
+    f = jnp.minimum(jnp.asarray(floor, dtype=y.dtype), 1.0 / m)
+    z = project_simplex(y - f, total=1.0 - m * f)
+    return z + f
 
 
 def _project(norm: dict, beta_min: float) -> dict:
@@ -96,6 +113,9 @@ class GdResult(NamedTuple):
     gamma: Array
     iters: Array
     grad_norm: Array
+    mom: tuple       # final Adam moments (m1, m2) -- zeros when optimizer="sgd"
+    opt_steps: Array # () int32 cumulative optimizer steps behind `mom`
+                     # (init_steps + iters; drives Adam bias correction on resume)
 
 
 def _tree_norm(t) -> Array:
@@ -116,7 +136,17 @@ def gd_solve(
     w: EccWeights,
     init_norm: dict,
     cfg: GdConfig,
+    init_mom: tuple | None = None,
+    init_steps: Array | None = None,
 ) -> GdResult:
+    """Projected (Adam-)GD for one split point.
+
+    init_mom/init_steps resume a previous solve's optimizer state (online
+    warm restarts): the Adam moments keep their accumulated history and the
+    bias correction continues from init_steps instead of restarting at t=1.
+    """
+    if cfg.stop_rule not in ("pgd", "raw"):
+        raise ValueError(f"stop_rule must be 'pgd' or 'raw', got {cfg.stop_rule!r}")
     beta_min = env.radio.beta_min
 
     def gamma_fn(norm):
@@ -124,6 +154,7 @@ def gd_solve(
 
     grad_fn = jax.value_and_grad(gamma_fn)
     adam = cfg.optimizer == "adam"
+    steps0 = jnp.int32(0) if init_steps is None else init_steps.astype(jnp.int32)
 
     def cond(state):
         _, _, _, it, done = state
@@ -132,12 +163,11 @@ def gd_solve(
     def body(state):
         norm, mom, gamma_prev, it, _ = state
         gamma, g = grad_fn(norm)
-        gnorm = _tree_norm(g)
         if adam:
             m1, m2 = mom
             m1 = jax.tree.map(lambda a, b: cfg.adam_b1 * a + (1 - cfg.adam_b1) * b, m1, g)
             m2 = jax.tree.map(lambda a, b: cfg.adam_b2 * a + (1 - cfg.adam_b2) * b * b, m2, g)
-            t = (it + 1).astype(jnp.float32)
+            t = (steps0 + it + 1).astype(jnp.float32)
             step = jax.tree.map(
                 lambda a, b: cfg.step_size
                 * (a / (1 - cfg.adam_b1**t))
@@ -150,8 +180,18 @@ def gd_solve(
             step = jax.tree.map(lambda x: cfg.step_size * x, g)
         new = _project(jax.tree.map(lambda a, b: a - b, norm, step), beta_min)
         gamma_new = gamma_fn(new)
+        if cfg.stop_rule == "pgd":
+            # Projected-gradient residual: the raw-gradient probe step is
+            # independent of the optimizer, so Adam's rescaled steps cannot
+            # mask (or fake) convergence on the constraint boundary.
+            probe = new if not adam else _project(
+                jax.tree.map(lambda a, b: a - cfg.step_size * b, norm, g), beta_min)
+            gcrit = _tree_norm(jax.tree.map(lambda a, b: a - b, norm, probe))
+            gcrit = gcrit / cfg.step_size
+        else:
+            gcrit = _tree_norm(g)
         done = jnp.logical_or(
-            gnorm < cfg.eps,
+            gcrit < cfg.eps,
             jnp.logical_or(
                 jnp.abs(gamma_new - gamma) < cfg.eps * jnp.maximum(1.0, jnp.abs(gamma)),
                 _tree_maxdiff(new, norm) < cfg.eps,
@@ -163,11 +203,13 @@ def gd_solve(
         jax.tree.map(jnp.zeros_like, init_norm),
         jax.tree.map(jnp.zeros_like, init_norm),
     )
+    mom0 = zero_mom if init_mom is None else init_mom
     norm0 = _project(init_norm, beta_min)
-    state0 = (norm0, zero_mom, gamma_fn(norm0), jnp.int32(0), jnp.bool_(False))
-    norm, _, gamma, it, _ = jax.lax.while_loop(cond, body, state0)
+    state0 = (norm0, mom0, gamma_fn(norm0), jnp.int32(0), jnp.bool_(False))
+    norm, mom, gamma, it, _ = jax.lax.while_loop(cond, body, state0)
     _, g = grad_fn(norm)
-    return GdResult(norm=norm, gamma=gamma, iters=it, grad_norm=_tree_norm(g))
+    return GdResult(norm=norm, gamma=gamma, iters=it, grad_norm=_tree_norm(g),
+                    mom=mom, opt_steps=steps0 + it)
 
 
 # --------------------------------------------------------------------------
@@ -178,6 +220,9 @@ class LoopResult(NamedTuple):
     iters: Array       # (F+1,)
     norms: dict        # stacked per-split optima, leaves lead with (F+1, ...)
     total_iters: Array
+    moms: tuple        # stacked per-split Adam moments (m1, m2), leaves (F+1, ...)
+    opt_steps: Array   # (F+1,) int32 cumulative optimizer steps per split
+    used_warm: Array   # (F+1,) bool: split started from the cross-epoch state
 
 
 def gd_loop(
@@ -188,6 +233,9 @@ def gd_loop(
     *,
     chain: bool = True,
     warm: dict | None = None,
+    warm_mom: tuple | None = None,
+    warm_steps: Array | None = None,
+    use_warm: Array | bool = True,
 ) -> LoopResult:
     """Solve all F+1 split points with one warm-start policy.
 
@@ -195,30 +243,77 @@ def gd_loop(
                                starts from split s's optimum.
     chain=False, warm=None  -- plain GD: every split starts from cold_init
                                (the paper's 'traditional GD' baseline).
-    warm=stacked norms      -- online mode: split s starts from warm[s], the
-                               previous *epoch's* optimum at the same split
-                               (leaves lead with (F+1, ...)). Under correlated
-                               fading this is the Li-GD trick applied across
-                               time instead of across split points.
+    warm=stacked norms      -- online mode (leaves lead with (F+1, ...)):
+                               warm[s] is the previous *epoch's* optimum at
+                               split s. Each split starts from the BETTER of
+                               warm[s] and the Li-GD chain carry (split s-1's
+                               fresh optimum), judged by one extra utility
+                               evaluation: under high epoch-to-epoch
+                               correlation the temporal start is near-optimal
+                               and stops almost immediately, while a stale
+                               start (channel moved) silently degrades to the
+                               paper's chain -- so online mode is never worse
+                               than a cold Li-GD sweep. warm_mom / warm_steps
+                               resume the per-split Adam moments and
+                               bias-correction step counts (from a previous
+                               LoopResult.moms/opt_steps) whenever the
+                               temporal start is chosen, so the optimizer
+                               continues its trajectory instead of re-biasing
+                               from zero; the chain start always uses fresh
+                               moments, matching Table I.
+    use_warm (warm mode)    -- scalar bool (traced OK; vmap it for per-member
+                               fleet selection): False disables the temporal
+                               starts entirely, making the solve *exactly*
+                               the paper's chained Li-GD. The engine's
+                               rho-adaptive selector drives this.
+
+    The returned moms/opt_steps always carry each split's final optimizer
+    state for the next epoch's resume.
     """
     splits = jnp.arange(prof.n_layers + 1, dtype=jnp.int32)
     init = cold_init(env)
 
     if warm is not None:
-        def step(carry, xs):
-            s, w0 = xs
-            res = gd_solve(env, prof, s, w, w0, cfg)
-            return carry, (res.gamma, res.iters, res.norm)
+        if warm_mom is None:
+            warm_mom = (jax.tree.map(jnp.zeros_like, warm),
+                        jax.tree.map(jnp.zeros_like, warm))
+        if warm_steps is None:
+            warm_steps = jnp.zeros_like(splits)
+        use_warm = jnp.asarray(use_warm, dtype=bool)
+        beta_min = env.radio.beta_min
 
-        _, (gammas, iters, norms) = jax.lax.scan(step, 0, (splits, warm))
+        def step(carry_norm, xs):
+            s, w0, m1, m2, st0 = xs
+
+            def gamma_at(n):
+                return _utility(env, prof, s, to_physical(n, env), w)
+
+            pick_warm = jnp.logical_and(use_warm,
+                                        gamma_at(w0) <= gamma_at(carry_norm))
+            sel = lambda a, b: jnp.where(pick_warm, a, b)
+            start = jax.tree.map(sel, w0, carry_norm)
+            mom0 = jax.tree.map(lambda x: jnp.where(pick_warm, x, 0.0),
+                                (m1, m2))
+            res = gd_solve(env, prof, s, w, start, cfg, init_mom=mom0,
+                           init_steps=jnp.where(pick_warm, st0, 0))
+            return res.norm, (res.gamma, res.iters, res.norm, res.mom,
+                              res.opt_steps, pick_warm)
+
+        init = _project(init, beta_min)
+        _, (gammas, iters, norms, moms, opt_steps, used_warm) = jax.lax.scan(
+            step, init, (splits, warm, warm_mom[0], warm_mom[1], warm_steps))
     else:
         def step(carry_norm, s):
             res = gd_solve(env, prof, s, w, carry_norm, cfg)
-            return (res.norm if chain else carry_norm), (res.gamma, res.iters, res.norm)
+            return (res.norm if chain else carry_norm), (
+                res.gamma, res.iters, res.norm, res.mom, res.opt_steps)
 
-        _, (gammas, iters, norms) = jax.lax.scan(step, init, splits)
+        _, (gammas, iters, norms, moms, opt_steps) = jax.lax.scan(
+            step, init, splits)
+        used_warm = jnp.zeros_like(splits, dtype=bool)
     return LoopResult(gammas=gammas, iters=iters, norms=norms,
-                      total_iters=jnp.sum(iters))
+                      total_iters=jnp.sum(iters), moms=moms,
+                      opt_steps=opt_steps, used_warm=used_warm)
 
 
 def li_gd_loop(
@@ -283,9 +378,10 @@ def greedy_round_dn(env: NetworkEnv, beta: Array, p: Array) -> Array:
     cell = jax.nn.one_hot(env.ap, env.n_aps)         # (U, N)
 
     def step(ap_tx, u):
-        # ap_tx: (N, M) power each AP already spends per subchannel
-        interf = jnp.einsum("nm,nm->m", ap_tx, g_all[u]) - ap_tx[env.ap[u]] * own[u]
-        interf = jnp.maximum(interf, 0.0)
+        # ap_tx: (N, M) power each AP already spends per subchannel.
+        # Other-AP interference via a masked sum (no full-sum-minus-own-AP
+        # subtraction: fp32-safe, matching the channel.py convention).
+        interf = jnp.einsum("nm,nm,n->m", ap_tx, g_all[u], 1.0 - cell[u])
         sinr = p[u] * own[u] / (interf + env.noise_dn)
         m = jnp.argmax(beta[u] * jnp.log1p(sinr))
         add = p[u] * jnp.outer(cell[u], jax.nn.one_hot(m, env.n_sub))

@@ -167,6 +167,12 @@ class GdConfig:
     optimizer: str = static_field(default="sgd")
     adam_b1: float = static_field(default=0.9)
     adam_b2: float = static_field(default=0.999)
+    # First stopping rule (Table I line 6). "pgd" tests the projected-gradient
+    # residual ||x - P(x - step_size*g)|| / step_size < eps, which vanishes at
+    # a constrained (simplex/box boundary) optimum; "raw" is the paper-parity
+    # baseline ||g|| < eps, which never fires on the boundary and silently
+    # defers to the looser Gamma/maxdiff rules.
+    stop_rule: str = static_field(default="pgd")
 
 
 @_register

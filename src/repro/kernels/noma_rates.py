@@ -67,22 +67,27 @@ def _kernel(own_u_ref, own_v_ref, w_intra_ref, w_power_ref, g_vu_ref,
 
 def noma_pairwise_kernel(
     own_u: jax.Array,    # (U, M) fp32
-    own_v: jax.Array,    # (U, M)
-    w_intra: jax.Array,  # (U, M)
-    w_power: jax.Array,  # (U, M)
-    g_vu: jax.Array,     # (U, U, M)  interferer-major
-    same: jax.Array,     # (U, U) fp32 0/1
+    own_v: jax.Array,    # (V, M)  V may exceed U (independent padding)
+    w_intra: jax.Array,  # (V, M)
+    w_power: jax.Array,  # (V, M)
+    g_vu: jax.Array,     # (V, U, M)  interferer-major
+    same: jax.Array,     # (U, V) fp32 0/1
     descending: bool = True,
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    n_valid: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
+    """n_valid: number of real (unpadded) interferer rows; rows >= n_valid are
+    masked out of both reductions (defaults to V, i.e. no padding)."""
     u, m = own_u.shape
-    bu, bv, bm = min(block_u, u), min(block_v, u), min(block_m, m)
-    nu, nvb, nm = pl.cdiv(u, bu), pl.cdiv(u, bv), pl.cdiv(m, bm)
+    v = own_v.shape[0]
+    n_valid = v if n_valid is None else n_valid
+    bu, bv, bm = min(block_u, u), min(block_v, v), min(block_m, m)
+    nu, nvb, nm = pl.cdiv(u, bu), pl.cdiv(v, bv), pl.cdiv(m, bm)
 
-    kernel = functools.partial(_kernel, descending=descending, n_users=u,
+    kernel = functools.partial(_kernel, descending=descending, n_users=n_valid,
                                block_v=bv)
     grid = (nu, nm, nvb)
     out = pl.pallas_call(

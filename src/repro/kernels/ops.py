@@ -63,18 +63,24 @@ def flash_attention(
 
 def _noma_pairwise_padded(own, w_intra, w_power, g_vu, same, descending,
                           interpret, block_u, block_v, block_m):
-    """Pad to block multiples, run the kernel, slice back to (U, M)."""
+    """Pad to block multiples, run the kernel, slice back to (U, M).
+
+    The receiver (U) and interferer (V) axes are padded *independently* to
+    their own block sizes -- the kernel tiles receivers by block_u and
+    streams interferers by block_v, so padding both to block_u would read out
+    of bounds (or double-count clamped blocks) whenever block_v != block_u."""
     u, m = own.shape
     bm = min(block_m, m)
-    own_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
-    wi_p = _pad_to(_pad_to(w_intra, block_u, 0), bm, 1)
-    wp_p = _pad_to(_pad_to(w_power, block_u, 0), bm, 1)
-    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_u, 0), block_u, 1), bm, 2)
-    same_p = _pad_to(_pad_to(same, block_u, 0), block_u, 1)
+    own_u_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
+    own_v_p = _pad_to(_pad_to(own, block_v, 0), bm, 1)
+    wi_p = _pad_to(_pad_to(w_intra, block_v, 0), bm, 1)
+    wp_p = _pad_to(_pad_to(w_power, block_v, 0), bm, 1)
+    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_v, 0), block_u, 1), bm, 2)
+    same_p = _pad_to(_pad_to(same, block_u, 0), block_v, 1)
     intra, inter = noma_pairwise_kernel(
-        own_p, own_p, wi_p, wp_p, g_p, same_p,
+        own_u_p, own_v_p, wi_p, wp_p, g_p, same_p,
         descending=descending, block_u=block_u, block_v=block_v, block_m=bm,
-        interpret=interpret,
+        n_valid=u, interpret=interpret,
     )
     return intra[:u, :m], inter[:u, :m]
 

@@ -3,5 +3,7 @@ time-correlated (online warm-start) environments."""
 from repro.planning.engine import (  # noqa: F401
     PlannerEngine,
     PlanState,
+    WarmStateShapeError,
+    member,
     stack_envs,
 )

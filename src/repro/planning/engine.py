@@ -11,13 +11,28 @@ entry points share the cache:
                            (one compiled program optimizes all draws).
   replan(prev, env)     -- online Li-GD: every split point warm-starts from
                            the previous epoch's normalized optimum at the
-                           same split. Under time-correlated fading the
-                           previous optimum is near-optimal, so this is the
-                           paper's warm-start argument (Corollary 4) applied
-                           across *time* instead of across split points.
+                           same split *and resumes its Adam moments*, so the
+                           optimizer continues its trajectory instead of
+                           re-biasing from zero. Under time-correlated fading
+                           the previous optimum is near-optimal, so this is
+                           the paper's warm-start argument (Corollary 4)
+                           applied across *time* instead of across split
+                           points.
+  replan_many(prev, envs) -- the vmapped replan: a fleet of scenarios
+                           evolving in parallel, one compiled program.
 
-plan/replan return a PlanState carrying both the discrete SplitPlan and the
-stacked normalized optima needed to warm-start the next epoch.
+All entry points return a PlanState carrying the discrete SplitPlan plus the
+solver state needed to warm-start the next epoch: the stacked normalized
+optima, the per-split Adam moments and step counts, and the epoch's uplink
+gains. The gains feed a rho-adaptive selector: replan estimates the
+epoch-to-epoch channel correlation between the stored and observed gains and
+disables the temporal warm starts (use_warm=False -> the compiled warm
+program runs an exact cold Li-GD chain) for any scenario whose estimate
+drops below `warm_rho_min` -- at low correlation the previous optimum is
+stale and warm-starting from it costs iterations instead of saving them.
+Independently of the selector, each split point only adopts the temporal
+start when one utility probe says it beats the fresh chain carry, so replan
+is never structurally worse than a cold sweep.
 """
 from __future__ import annotations
 
@@ -26,6 +41,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import li_gd
 from repro.core.types import (
@@ -39,12 +55,20 @@ from repro.core.types import (
 )
 
 
+class WarmStateShapeError(ValueError):
+    """A warm-start PlanState does not fit the observed network shape
+    (user/AP/subchannel count changed); re-plan cold instead."""
+
+
 class PlanState(NamedTuple):
     """A plan plus the solver state needed to warm-start the next epoch."""
 
     plan: SplitPlan
     norms: dict          # per-split normalized optima, leaves lead with (F+1, ...)
     total_iters: Array   # () total GD iterations spent producing this plan
+    moms: tuple | None = None      # per-split Adam moments (m1, m2), leaves (F+1, ...)
+    opt_steps: Array | None = None # (F+1,) int32 optimizer steps behind `moms`
+    gains: Array | None = None     # g_up of the planned epoch (rho estimation)
 
 
 def stack_envs(envs: Sequence[NetworkEnv]) -> NetworkEnv:
@@ -52,17 +76,46 @@ def stack_envs(envs: Sequence[NetworkEnv]) -> NetworkEnv:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *envs)
 
 
+def member(tree, i: int):
+    """Slice fleet member i out of a batched pytree (stacked NetworkEnv or
+    batched PlanState). Scalar leaves -- e.g. radio/comp constants that
+    Scenario.env_many broadcast or that stayed unbatched -- pass through."""
+    return jax.tree.map(lambda x: x[i] if getattr(x, "ndim", 0) > 0 else x,
+                        tree)
+
+
 def _solve_state(env, prof, w, cfg, method, rounding) -> PlanState:
     loop = li_gd.gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
     plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
-    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters)
+    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
+                     moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up)
 
 
-def _resolve_state(env, prof, w, warm, cfg, method, rounding) -> PlanState:
+def _resolve_state(env, prof, w, warm, warm_mom, warm_steps, use_warm,
+                   cfg, method, rounding) -> PlanState:
     del method  # warm mode supersedes the chain-vs-cold distinction
-    loop = li_gd.gd_loop(env, prof, w, cfg, warm=warm)
+    loop = li_gd.gd_loop(env, prof, w, cfg, warm=warm, warm_mom=warm_mom,
+                         warm_steps=warm_steps, use_warm=use_warm)
     plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
-    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters)
+    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
+                     moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up)
+
+
+def _rho_estimate(prev_gains: Array, gains: Array) -> np.ndarray:
+    """Estimate the epoch-to-epoch fading correlation rho from two gain
+    tensors (per fleet member when batched). For the Gauss-Markov process
+    corr(|h_t|^2, |h_{t+1}|^2) = rho^2, so rho_hat = sqrt(clip(corr, 0, 1))."""
+    a = np.asarray(prev_gains, dtype=np.float64)
+    b = np.asarray(gains, dtype=np.float64)
+    batched = a.ndim > 3
+    a = a.reshape(a.shape[0] if batched else 1, -1)
+    b = b.reshape(b.shape[0] if batched else 1, -1)
+    a = a - a.mean(axis=1, keepdims=True)
+    b = b - b.mean(axis=1, keepdims=True)
+    denom = np.sqrt((a * a).sum(axis=1) * (b * b).sum(axis=1))
+    corr = (a * b).sum(axis=1) / np.maximum(denom, 1e-30)
+    rho = np.sqrt(np.clip(corr, 0.0, 1.0))
+    return rho if batched else rho[0]
 
 
 class PlannerEngine:
@@ -70,6 +123,20 @@ class PlannerEngine:
 
     method: 'li_gd' (paper warm-start chain) or 'gd' (cold-start baseline).
     rounding: 'best' | 'greedy' | 'paper' (see li_gd.assemble_plan).
+    warm_rho_min: replan's rho-adaptive selector -- a scenario whose
+        estimated epoch-to-epoch correlation falls below this threshold has
+        its temporal warm starts disabled (the compiled warm program then
+        runs the exact cold Li-GD chain), because a stale optimum is a worse
+        start than no prior at all. 0.0 disables the fallback.
+    warm_moment_decay: factor applied to the carried Adam moments on resume.
+        The sweet spot is a *softened* restart: carrying the moments verbatim
+        steers the new epoch with a stale direction and over-remembered
+        scale (slightly worse optima), while zeroing them re-biases Adam
+        from t=0 and its sign-like opening steps walk away from the
+        near-optimal start (many extra iterations). Decaying both moments --
+        with the step count carried so bias correction does not re-amplify
+        them -- keeps per-coordinate scale memory but lets fresh gradients
+        dominate within a few steps. 1.0 resumes verbatim, 0.0 zeroes.
     """
 
     def __init__(
@@ -79,14 +146,23 @@ class PlannerEngine:
         cfg: GdConfig = GdConfig(),
         method: str = "li_gd",
         rounding: str = "best",
+        warm_rho_min: float = 0.5,
+        warm_moment_decay: float = 0.1,
     ):
         if method not in ("li_gd", "gd"):
             raise KeyError(method)
+        if not 0.0 <= warm_rho_min <= 1.0:
+            raise ValueError(f"warm_rho_min must be in [0, 1], got {warm_rho_min}")
+        if not 0.0 <= warm_moment_decay <= 1.0:
+            raise ValueError(
+                f"warm_moment_decay must be in [0, 1], got {warm_moment_decay}")
         self.prof = prof
         self.weights = weights
         self.cfg = cfg
         self.method = method
         self.rounding = rounding
+        self.warm_rho_min = warm_rho_min
+        self.warm_moment_decay = warm_moment_decay
         self._cache: dict[tuple, object] = {}
 
     # -- compiled-program cache ------------------------------------------
@@ -109,6 +185,10 @@ class PlannerEngine:
                 base = functools.partial(_resolve_state, cfg=self.cfg,
                                          method=self.method, rounding=self.rounding)
                 fn = jax.jit(base)
+            elif kind == "replan_many":
+                base = functools.partial(_resolve_state, cfg=self.cfg,
+                                         method=self.method, rounding=self.rounding)
+                fn = jax.jit(jax.vmap(base, in_axes=(0, None, None, 0, 0, 0, 0)))
             else:
                 raise KeyError(kind)
             self._cache[key] = fn
@@ -145,23 +225,93 @@ class PlannerEngine:
         w = self._w(envs, weights, n_users=envs.g_up.shape[1])
         return self._compiled("plan_many", envs)(envs, self.prof, w)
 
+    # -- warm-start payload assembly -------------------------------------
+    def _warm_payload(self, prev: PlanState, gains: Array):
+        """(norms, moms, steps, use_warm) from a previous PlanState. `gains`
+        is the new epoch's g_up -- (U, N, M) for a single scenario,
+        (B, U, N, M) for a fleet -- compared against prev.gains to estimate
+        the epoch-to-epoch correlation; use_warm (scalar / per-member (B,))
+        disables the temporal warm starts for scenarios whose estimate fell
+        below warm_rho_min (the compiled warm program then degrades to an
+        exact cold Li-GD chain for them)."""
+        norms, moms, steps = prev.norms, prev.moms, prev.opt_steps
+        if moms is None:
+            moms = (jax.tree.map(jnp.zeros_like, norms),
+                    jax.tree.map(jnp.zeros_like, norms))
+        elif self.warm_moment_decay != 1.0:
+            moms = jax.tree.map(lambda x: self.warm_moment_decay * x, moms)
+        if steps is None:
+            steps = jnp.zeros(norms["beta_up"].shape[:-2], jnp.int32)
+        batched = gains.ndim > 3
+        if self.warm_rho_min <= 0.0 or prev.gains is None:
+            use_warm = np.ones((gains.shape[0],), bool) if batched else True
+        else:
+            rho = _rho_estimate(prev.gains, gains)
+            use_warm = rho >= self.warm_rho_min
+        return norms, moms, steps, jnp.asarray(use_warm)
+
     def replan(
         self,
         prev: PlanState | None,
         env: NetworkEnv,
         weights: EccWeights | None = None,
     ) -> PlanState:
-        """Online re-plan for the next epoch of a time-correlated scenario,
-        warm-starting each split point from `prev.norms`. Falls back to a
-        cold plan() when there is no previous state."""
+        """Online re-plan for the next epoch of a time-correlated scenario:
+        every split point starts from the better of `prev.norms[s]` (resuming
+        its Adam moments/step counts, so early stopping fires as soon as the
+        tracked optimum is re-attained) and the fresh Li-GD chain carry.
+        Falls back to a cold plan() when there is no previous state, and
+        disables the temporal starts entirely (use_warm=False -> exact cold
+        Li-GD chain, same compiled program) when the estimated epoch-to-epoch
+        correlation is below `warm_rho_min`."""
         if prev is None:
             return self.plan(env, weights)
         warm_shape = tuple(prev.norms["beta_up"].shape[1:])
-        if warm_shape != (env.n_users, env.n_sub):
-            raise ValueError(
+        if warm_shape != (env.n_users, env.n_sub) or (
+                prev.gains is not None
+                and tuple(prev.gains.shape) != tuple(env.g_up.shape)):
+            raise WarmStateShapeError(
                 f"warm-start state is for a (U, M)={warm_shape} network but the "
-                f"new env has ({env.n_users}, {env.n_sub}); scenario shapes must "
-                "stay static across epochs (use plan() after a shape change)")
+                f"new env has {tuple(env.g_up.shape)}; scenario shapes (users, "
+                "APs, subchannels) must stay static across epochs (use plan() "
+                "after a shape change)")
+        norms, moms, steps, use_warm = self._warm_payload(prev, env.g_up)
         return self._compiled("replan", env)(
-            env, self.prof, self._w(env, weights), prev.norms
+            env, self.prof, self._w(env, weights), norms, moms, steps, use_warm
+        )
+
+    def replan_many(
+        self,
+        prev: PlanState | None,
+        envs: NetworkEnv | Sequence[NetworkEnv],
+        weights: EccWeights | None = None,
+    ) -> PlanState:
+        """Batched replan: a fleet of scenarios evolving in parallel, all
+        warm-started in one compiled vmapped program. `prev` is the batched
+        PlanState from the previous epoch's plan_many/replan_many (leaves lead
+        with the fleet dim); `envs` is a stacked NetworkEnv or a list of
+        same-shape environments. The rho-adaptive fallback applies per fleet
+        member: stale members run the exact cold Li-GD chain, fresh members
+        resume their Adam trajectory."""
+        if not isinstance(envs, NetworkEnv):
+            envs = list(envs)
+            if not envs:
+                raise ValueError("replan_many needs at least one environment")
+            envs = stack_envs(envs)
+        if prev is None:
+            return self.plan_many(envs, weights)
+        b, u, m = envs.g_up.shape[0], envs.g_up.shape[1], envs.g_up.shape[3]
+        warm_shape = tuple(prev.norms["beta_up"].shape)
+        if warm_shape[:1] + warm_shape[2:] != (b, u, m) or (
+                prev.gains is not None
+                and tuple(prev.gains.shape) != tuple(envs.g_up.shape)):
+            raise WarmStateShapeError(
+                f"warm-start state with leaves {warm_shape} does not match the "
+                f"stacked envs {tuple(envs.g_up.shape)}; fleet and scenario "
+                "shapes must stay static across epochs (use plan_many() after "
+                "a shape change)")
+        w = self._w(envs, weights, n_users=u)
+        norms, moms, steps, use_warm = self._warm_payload(prev, envs.g_up)
+        return self._compiled("replan_many", envs)(
+            envs, self.prof, w, norms, moms, steps, use_warm
         )

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import Model
 from repro.models.layers import COMPUTE_DTYPE, embed_lookup, logits_out
+from repro.planning import WarmStateShapeError
 from repro.runtime import sharding as shlib
 
 
@@ -133,6 +134,13 @@ class OnlineSplitServer:
 
     model/params may be None for planning-only runs (benchmarks, tests):
     the re-cut is then recorded but no programs are built.
+
+    The PlanState threaded across epochs carries the full warm-start payload
+    (normalized optima, Adam moments + step counts, and the epoch's gains for
+    the engine's rho-adaptive selector). A network shape change (user count /
+    subchannel count) invalidates that state: observe() catches the engine's
+    shape-change ValueError, resets the warm state, and re-plans cold --
+    `cold_resets` counts these events.
     """
 
     def __init__(self, engine, model: Model | None = None, params=None,
@@ -148,12 +156,22 @@ class OnlineSplitServer:
         self.split_layer: int | None = None
         self.epoch = 0
         self.recuts = 0
+        self.cold_resets = 0
         self.total_iters = 0
 
     def observe(self, env) -> SplitPrograms | None:
         """Advance one epoch: re-plan on schedule, re-cut if s* moved."""
         if self.epoch % self.replan_every == 0:
-            self.state = self.engine.replan(self.state, env)
+            try:
+                self.state = self.engine.replan(self.state, env)
+            except WarmStateShapeError:
+                # Shape change: the warm-start state no longer fits this
+                # network. Reset it and fall back to a cold plan. (Other
+                # ValueErrors propagate -- swallowing them would silently
+                # disable warm starts forever.)
+                self.state = None
+                self.cold_resets += 1
+                self.state = self.engine.plan(env)
             self.total_iters += int(self.state.total_iters)
             s = int(self.state.plan.s)
             if s != self.split_layer:

@@ -11,6 +11,12 @@ NetworkEnv hits the same compiled solver:
 `step` advances one re-planning epoch and emits the NetworkEnv realization;
 `episode` rolls a whole correlated sequence. Epoch 0's env is distributed
 exactly like core.channel.make_env (uniform positions, Exp(1) fading).
+
+`init_many`/`step_many`/`env_many` are the vmapped fleet variants: B
+independent realizations of the same ScenarioConfig evolving in parallel
+(leaves lead with B), feeding PlannerEngine.plan_many/replan_many with one
+compiled program. step_many optionally takes a per-member fading rho, so a
+single fleet can sweep correlation levels.
 """
 from __future__ import annotations
 
@@ -92,12 +98,15 @@ class Scenario:
             epoch=jnp.int32(0),
         )
 
-    def step(self, key: jax.Array, state: ScenarioState) -> ScenarioState:
+    def step(self, key: jax.Array, state: ScenarioState,
+             rho: Array | float | None = None) -> ScenarioState:
+        """Advance one epoch. `rho` overrides the config's fading correlation
+        (may be a traced scalar, enabling per-member sweeps under vmap)."""
         cfg = self.cfg
         k_mob, k_up, k_dn, k_mask, k_churn = jax.random.split(key, 5)
         mob = mobility.waypoint_step(k_mob, state.mob, cfg.speed_mps,
                                      cfg.epoch_dt_s, cfg.side_m)
-        rho = cfg.rho
+        rho = cfg.rho if rho is None else rho
         h_up = fading.gauss_markov_step(k_up, state.h_up, rho)
         h_dn = fading.gauss_markov_step(k_dn, state.h_dn, rho)
         if cfg.arrival_rate_hz > 0.0:
@@ -123,6 +132,27 @@ class Scenario:
         ap = jnp.argmax(path, axis=1).astype(jnp.int32)
         return NetworkEnv(g_up=g_up, g_dn=g_dn, ap=ap, radio=cfg.radio,
                           comp=cfg.comp)
+
+    # -- vmapped fleet API -------------------------------------------------
+    def init_many(self, keys: jax.Array) -> ScenarioState:
+        """Initialize B independent realizations; keys: (B, 2) from
+        jax.random.split. Returned leaves lead with B."""
+        return jax.vmap(self.init)(keys)
+
+    def step_many(self, keys: jax.Array, states: ScenarioState,
+                  rho: Array | None = None) -> ScenarioState:
+        """Advance every fleet member one epoch. rho: optional (B,) per-member
+        fading correlation override (sweep rho across the fleet in one
+        compiled program)."""
+        if rho is None:
+            return jax.vmap(self.step)(keys, states)
+        return jax.vmap(self.step)(keys, states, jnp.asarray(rho))
+
+    def env_many(self, states: ScenarioState) -> NetworkEnv:
+        """Materialize the stacked NetworkEnv of the fleet (leaves lead with
+        B; constant radio/comp scalars are broadcast), ready for
+        PlannerEngine.plan_many/replan_many."""
+        return jax.vmap(self.env)(states)
 
     def episode(self, key: jax.Array, n_epochs: int) -> Iterator[NetworkEnv]:
         """Yield n_epochs correlated NetworkEnv realizations."""

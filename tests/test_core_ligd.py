@@ -35,8 +35,72 @@ def test_gd_decreases_utility(small_env, weights, gd_cfg):
     assert int(res.iters) > 0
 
 
+def test_stop_rules(small_env, weights):
+    """Both stopping rules converge to comparable optima; 'raw' is the
+    paper-parity baseline, 'pgd' (default) detects constrained optima. An
+    unknown rule raises eagerly."""
+    env = small_env
+    prof = profiles.nin()
+    s = jnp.int32(3)
+    init = _project(cold_init(env), env.radio.beta_min)
+    res = {}
+    for rule in ("pgd", "raw"):
+        cfg = GdConfig(step_size=5e-3, max_iters=120, stop_rule=rule)
+        res[rule] = gd_solve(env, prof, s, weights, init, cfg)
+    assert float(res["pgd"].gamma) == pytest.approx(float(res["raw"].gamma),
+                                                    rel=0.05)
+    with pytest.raises(ValueError):
+        gd_solve(env, prof, s, weights, init,
+                 GdConfig(step_size=5e-3, max_iters=10, stop_rule="newton"))
+
+
+def test_gd_solve_resumes_adam_state(small_env, weights):
+    """Resuming the (decayed, as the engine does) Adam moments + step count
+    at a *converged* optimum stops almost immediately -- the carried state
+    must not re-bias from zero and walk away."""
+    env = small_env
+    prof = profiles.nin()
+    s = jnp.int32(0)
+    cfg = GdConfig(step_size=1e-2, eps=1e-4, max_iters=600, optimizer="adam")
+    init = _project(cold_init(env), env.radio.beta_min)
+    first = gd_solve(env, prof, s, weights, init, cfg)
+    assert int(first.iters) < cfg.max_iters  # converged, not budget-capped
+    assert int(first.opt_steps) == int(first.iters)
+    mom = jax.tree.map(lambda x: 0.1 * x, first.mom)
+    resumed = gd_solve(env, prof, s, weights, first.norm, cfg,
+                       init_mom=mom, init_steps=first.opt_steps)
+    assert int(resumed.iters) <= 3, int(resumed.iters)
+    assert float(resumed.gamma) <= float(first.gamma) + 1e-4
+    assert int(resumed.opt_steps) == int(first.opt_steps) + int(resumed.iters)
+
+
+def test_gd_loop_warm_adoption_flags(small_env, weights):
+    """Online mode's per-split adoption probe: on an unchanged env the
+    previous optima win the probe (used_warm mostly True) and the solve is
+    cheap; with use_warm=False no split adopts and the loop is the exact
+    cold Li-GD chain."""
+    from repro.core import gd_loop
+    env = small_env
+    prof = profiles.nin()
+    cfg = GdConfig(step_size=1e-2, eps=1e-4, max_iters=200, optimizer="adam")
+    base = gd_loop(env, prof, weights, cfg, chain=True)
+    assert not bool(jnp.any(base.used_warm))
+    warm = gd_loop(env, prof, weights, cfg, warm=base.norms,
+                   warm_mom=jax.tree.map(lambda x: 0.1 * x, base.moms),
+                   warm_steps=base.opt_steps)
+    assert float(jnp.mean(warm.used_warm.astype(jnp.float32))) >= 0.5
+    assert int(warm.total_iters) <= int(base.total_iters)
+    off = gd_loop(env, prof, weights, cfg, warm=base.norms, use_warm=False)
+    assert not bool(jnp.any(off.used_warm))
+    assert int(off.total_iters) == int(base.total_iters)
+    np.testing.assert_allclose(np.asarray(off.gammas), np.asarray(base.gammas),
+                               rtol=1e-6)
+
+
+@pytest.mark.slow
 def test_ligd_warm_start_reduces_iters(small_env, weights, gd_cfg):
-    """Corollary 4: warm-started Li-GD needs fewer total iterations."""
+    """Corollary 4: warm-started Li-GD needs fewer total iterations.
+    (slow: full vgg16 split sweep, two policies.)"""
     env = small_env
     prof = profiles.vgg16()
     li = li_gd_loop(env, prof, weights, gd_cfg)
@@ -44,8 +108,10 @@ def test_ligd_warm_start_reduces_iters(small_env, weights, gd_cfg):
     assert int(li.total_iters) < int(pl.total_iters)
 
 
+@pytest.mark.slow
 def test_ligd_per_layer_quality(small_env, weights, gd_cfg):
-    """Warm starts shouldn't find (much) worse optima than cold starts."""
+    """Warm starts shouldn't find (much) worse optima than cold starts.
+    (slow: two full split sweeps.)"""
     env = small_env
     prof = profiles.nin()
     li = li_gd_loop(env, prof, weights, gd_cfg)

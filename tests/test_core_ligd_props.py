@@ -22,3 +22,19 @@ def test_simplex_projection(seed, m):
     # idempotent
     x2 = project_simplex_floor(x, floor)
     np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(2, 12),
+       excess=st.floats(1.001, 50.0))
+def test_simplex_projection_infeasible_floor(seed, m, excess):
+    """m * floor > 1: the clamped projection must still land on the simplex
+    (sum 1, nonneg) -- the regression this guards silently returned rows
+    summing to 1 - m*floor + m*floor... < 1 with negative entries."""
+    floor = excess / m
+    y = jax.random.normal(jax.random.PRNGKey(seed), (5, m)) * 3.0
+    x = project_simplex_floor(y, floor)
+    np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
+    assert bool(jnp.all(x >= -1e-6))
+    # the clamped set is the single point ones/m
+    np.testing.assert_allclose(np.asarray(x), 1.0 / m, atol=1e-5)

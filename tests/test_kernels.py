@@ -84,6 +84,40 @@ def test_noma_rates_sweep(u, n, m, bu, bm):
                                atol=1e-3)
 
 
+@pytest.mark.parametrize("bu,bv", [(8, 16), (16, 8)])
+def test_noma_rates_mismatched_blocks(bu, bv):
+    """Receiver (U) and interferer (V) tiles are padded independently: with
+    U=20, block_u=8 pads the receiver axis to 24, which a block_v=16 grid
+    cannot tile -- the regression this guards produced NaN/garbage whenever
+    block_v != block_u."""
+    u, n, m = 20, 3, 6
+    env = make_env(jax.random.PRNGKey(7), n_users=u, n_aps=n, n_sub=m)
+    beta = jax.random.dirichlet(jax.random.PRNGKey(8), jnp.ones(m), (u,))
+    p = jax.random.uniform(jax.random.PRNGKey(9), (u,), minval=0.01, maxval=0.3)
+    out = ops.noma_uplink_rates(env, beta, p, interpret=True,
+                                block_u=bu, block_v=bv, block_m=8)
+    r = channel.uplink_rates(env, beta, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-5,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("bu,bv", [(8, 16), (16, 8)])
+def test_noma_pairwise_dn_mismatched_blocks(bu, bv):
+    """Downlink decomposition under block_u != block_v matches the einsum
+    reference end-to-end (SINR level)."""
+    u, n, m = 20, 3, 6
+    env = make_env(jax.random.PRNGKey(10), n_users=u, n_aps=n, n_sub=m)
+    beta = jax.random.dirichlet(jax.random.PRNGKey(11), jnp.ones(m), (u,))
+    p = jax.random.uniform(jax.random.PRNGKey(12), (u,), minval=0.1, maxval=10.0)
+    ref_sinr = channel.downlink_sinr(env, beta, p, backend="einsum")
+    intra, inter = ops.noma_pairwise_dn(env, beta * p[:, None], interpret=True,
+                                        block_u=bu, block_v=bv, block_m=8)
+    own = env.own_gain_dn()
+    ker_sinr = p[:, None] * own / (intra * own + inter + env.noise_dn)
+    np.testing.assert_allclose(np.asarray(ker_sinr), np.asarray(ref_sinr),
+                               rtol=1e-5, atol=1e-5 * float(np.max(ref_sinr)))
+
+
 def test_noma_pairwise_oracle_matches_channel_decomposition(small_env):
     """The kernel's (intra, inter) decomposition reproduces uplink_sinr."""
     env = small_env

@@ -123,9 +123,10 @@ def test_stage_lists():
     assert ds[1].moe is True and ds[1].n_layers == 27
 
 
+@pytest.mark.slow
 def test_long_context_ring_cache():
     """Local-window ring cache: decoding far past the window stays finite and
-    uses only window-sized memory."""
+    uses only window-sized memory. (slow: ~2 min of step-by-step decode)"""
     cfg = configs.get("recurrentgemma-9b").reduced()
     m = Model(cfg, remat=False)
     params = m.init(jax.random.PRNGKey(0))

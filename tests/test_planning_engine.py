@@ -13,7 +13,7 @@ from repro.core import (
     project_simplex_floor,
     solve,
 )
-from repro.planning import PlannerEngine, PlanState, stack_envs
+from repro.planning import PlannerEngine, PlanState, member, stack_envs
 from repro.scenarios import Scenario, ScenarioConfig
 
 
@@ -56,6 +56,19 @@ def test_simplex_floor_exact_budget():
     y = jax.random.normal(jax.random.PRNGKey(1), (3, m)) * 3.0
     x = project_simplex_floor(y, floor)
     np.testing.assert_allclose(np.asarray(x), floor, atol=1e-6)
+
+
+def test_simplex_floor_infeasible_budget():
+    """m * floor > 1 (Corollary 1's feasibility violated): the effective
+    floor is clamped to 1/m, so the output stays on the simplex instead of
+    silently summing to the negative residual budget."""
+    m = 4
+    for floor in (0.3, 1.0, 7.5):
+        y = jax.random.normal(jax.random.PRNGKey(2), (6, m)) * 5.0
+        x = project_simplex_floor(y, floor)
+        np.testing.assert_allclose(np.sum(np.asarray(x), -1), 1.0, atol=1e-5)
+        assert bool(jnp.all(x >= 0.0))
+        np.testing.assert_allclose(np.asarray(x), 1.0 / m, atol=1e-5)
 
 
 # -- engine entry points ---------------------------------------------------
@@ -117,10 +130,12 @@ def test_replan_none_falls_back_to_plan(small_env, weights, gd_cfg, engine):
                                                       abs=1e-6)
 
 
+@pytest.mark.slow
 def test_online_episode_warm_beats_cold():
     """Acceptance: across a >= 10-epoch correlated-fading episode, online
     warm-start re-planning spends strictly fewer total GD iterations than
-    cold re-planning, without giving up solution quality."""
+    cold re-planning, without giving up solution quality. (slow: 12-epoch
+    episode solved twice.)"""
     scfg = ScenarioConfig(n_users=8, n_aps=2, n_sub=4, fading_rho=0.995,
                           speed_mps=0.0, arrival_rate_hz=0.0)
     w = make_weights(scfg.n_users)
@@ -143,9 +158,102 @@ def test_online_episode_warm_beats_cold():
     assert warm_util <= cold_util * 1.05
 
 
+@pytest.mark.slow
+def test_replan_warm_vs_cold_regression_rho095():
+    """Regression for the PR 1 warm-start defect: at rho = 0.95 (below the
+    old ~0.99 break-even) warm replan must still spend no more GD iterations
+    than cold re-planning, at equal-or-better utility. (slow: 6-epoch episode
+    solved twice; the benchmark --quick smoke covers the same property.)"""
+    scfg = ScenarioConfig(n_users=8, n_aps=2, n_sub=4, fading_rho=0.95,
+                          speed_mps=0.0, arrival_rate_hz=0.0)
+    w = make_weights(scfg.n_users)
+    prof = profiles.nin()
+    warm_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    cold_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    sc = Scenario(scfg)
+    state = None
+    cold_total = warm_total = 0
+    cold_util = warm_util = 0.0
+    for t, env in enumerate(sc.episode(jax.random.PRNGKey(1), 6)):
+        cold = cold_eng.plan(env)
+        state = warm_eng.replan(state, env)
+        if t >= 1:  # epoch 0 is cold for both
+            cold_total += int(cold.total_iters)
+            warm_total += int(state.total_iters)
+            cold_util += float(cold.plan.utility)
+            warm_util += float(state.plan.utility)
+    assert warm_total <= cold_total, (warm_total, cold_total)
+    assert warm_util <= cold_util + 1e-3, (warm_util, cold_util)
+    # and the warm engine must actually have used its temporal state
+    assert warm_total < cold_total
+
+
+@pytest.mark.slow
+def test_replan_many_matches_sequential():
+    """Batched warm-start replan over a stacked fleet == per-scenario
+    sequential replan, epoch by epoch (same s*, utility, and iteration
+    counts). (slow: compiles both the fleet and per-member programs.)"""
+    scfg = ScenarioConfig(n_users=8, n_aps=2, n_sub=4, fading_rho=0.97,
+                          speed_mps=0.0, arrival_rate_hz=0.0)
+    fleet = 8
+    w = make_weights(scfg.n_users)
+    prof = profiles.nin()
+    fleet_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    seq_eng = PlannerEngine(prof, weights=w, cfg=ADAM_CFG)
+    sc = Scenario(scfg)
+    states = sc.init_many(jax.random.split(jax.random.PRNGKey(4), fleet))
+    batched, seq = None, [None] * fleet
+    for t in range(3):
+        envs = sc.env_many(states)
+        batched = fleet_eng.replan_many(batched, envs)
+        assert batched.plan.s.shape == (fleet,)
+        for i in range(fleet):
+            seq[i] = seq_eng.replan(seq[i], member(envs, i))
+            assert int(batched.plan.s[i]) == int(seq[i].plan.s), (t, i)
+            assert int(batched.total_iters[i]) == int(seq[i].total_iters), (t, i)
+            assert float(batched.plan.utility[i]) == pytest.approx(
+                float(seq[i].plan.utility), abs=1e-4), (t, i)
+        states = sc.step_many(jax.random.split(jax.random.PRNGKey(100 + t),
+                                               fleet), states)
+
+
+def test_replan_many_none_and_shape_checks():
+    prof = profiles.nin()
+    eng = PlannerEngine(prof, cfg=ADAM_CFG)
+    envs = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in range(2)])
+    state = eng.replan_many(None, envs)          # falls back to plan_many
+    assert state.plan.s.shape == (2,)
+    bad = stack_envs([make_env(jax.random.PRNGKey(9), 6, 2, 4) for _ in range(2)])
+    with pytest.raises(ValueError):
+        eng.replan_many(state, bad)
+    with pytest.raises(ValueError):
+        eng.replan_many(state, [])
+
+
+def test_replan_rho_threshold_one_equals_cold(small_env):
+    """warm_rho_min=1.0: the correlation estimate is (almost surely) below
+    threshold, so replan runs the exact cold Li-GD chain -- same split, same
+    utility, same iteration count as a fresh plan()."""
+    w = make_weights(small_env.n_users)
+    eng = PlannerEngine(profiles.nin(), weights=w, cfg=ADAM_CFG,
+                        warm_rho_min=1.0)
+    first = eng.plan(small_env)
+    env2 = make_env(jax.random.PRNGKey(42), 8, 2, 4)  # uncorrelated draw
+    warm = eng.replan(first, env2)
+    ref = eng.plan(env2)
+    assert int(warm.total_iters) == int(ref.total_iters)
+    assert int(warm.plan.s) == int(ref.plan.s)
+    assert float(warm.plan.utility) == pytest.approx(float(ref.plan.utility),
+                                                     abs=1e-6)
+
+
 def test_engine_rejects_unknown_method():
     with pytest.raises(KeyError):
         PlannerEngine(profiles.nin(), method="newton")
+    with pytest.raises(ValueError):
+        PlannerEngine(profiles.nin(), warm_rho_min=1.5)
+    with pytest.raises(ValueError):
+        PlannerEngine(profiles.nin(), warm_moment_decay=-0.1)
 
 
 # -- online serving hook ---------------------------------------------------
@@ -168,3 +276,23 @@ def test_online_split_server_replan_schedule(small_env):
     assert srv.total_iters > 0
     with pytest.raises(ValueError):
         OnlineSplitServer(eng, replan_every=0)
+
+
+def test_online_split_server_shape_change_resets_cold(small_env):
+    """A network shape change mid-serve (user churn beyond slot replacement)
+    must not raise: observe() resets the warm state and re-plans cold, as the
+    engine docstring promises."""
+    from repro.runtime.serve import OnlineSplitServer
+
+    eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+    srv = OnlineSplitServer(eng, replan_every=1)
+    srv.observe(small_env)                                  # (8, 2, 4)
+    assert srv.cold_resets == 0
+    grown = make_env(jax.random.PRNGKey(5), 10, 2, 4)       # U changed
+    srv.observe(grown)                                      # must not raise
+    assert srv.cold_resets == 1
+    assert srv.state is not None
+    assert srv.state.norms["beta_up"].shape[1:] == (10, 4)
+    srv.observe(make_env(jax.random.PRNGKey(6), 10, 2, 4))  # warm again
+    assert srv.cold_resets == 1
+    assert srv.epoch == 3
