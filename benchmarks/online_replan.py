@@ -15,19 +15,32 @@ sequentially with PlannerEngine.replan and checks the batched path agrees.
   PYTHONPATH=src python benchmarks/online_replan.py --rhos 0.9 0.99 0.999 --fleet 8
   PYTHONPATH=src python benchmarks/online_replan.py --preset iot_massive --episode
   PYTHONPATH=src python benchmarks/online_replan.py --quick   # CI smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python benchmarks/online_replan.py --mesh --fleet 8
+
+--mesh attaches a fleet mesh over all local devices: plan_many/replan_many
+then run shard_map over the fleet axis (one scenario shard per device, the
+carried warm state donated in place) instead of a single-device vmap.
 
 --episode keeps PR 1's single-scenario preset episode mode (plan vs replan
 per epoch on one correlated trajectory).
+
+--quick additionally asserts the dispatch path is device-resident: a warm
+replan_many must enqueue under jax.transfer_guard("disallow") -- any host
+numpy left in the warm gate would raise -- and return before the solver
+finishes (async dispatch, completion only at block_until_ready).
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import GdConfig, make_weights, profiles
 from repro.planning import PlannerEngine, member
+from repro.pshard import fleet_mesh, shard_fleet
 from repro.scenarios import Scenario, ScenarioConfig, presets
 
 
@@ -37,12 +50,12 @@ def _profile(name: str):
 
 
 def run_sweep(rhos, fleet, n_epochs, seed, prof_name, cfg, scfg,
-              verify=False) -> list[dict]:
+              verify=False, mesh=None) -> list[dict]:
     prof = _profile(prof_name)
     w = make_weights(scfg.n_users)
-    warm_eng = PlannerEngine(prof, weights=w, cfg=cfg)
-    cold_eng = PlannerEngine(prof, weights=w, cfg=cfg)
-    seq_eng = PlannerEngine(prof, weights=w, cfg=cfg)
+    warm_eng = PlannerEngine(prof, weights=w, cfg=cfg, mesh=mesh)
+    cold_eng = PlannerEngine(prof, weights=w, cfg=cfg, mesh=mesh)
+    seq_eng = PlannerEngine(prof, weights=w, cfg=cfg)  # per-member reference
     sc = Scenario(scfg)
 
     out = []
@@ -52,10 +65,15 @@ def run_sweep(rhos, fleet, n_epochs, seed, prof_name, cfg, scfg,
         fleet_state, seq_states = None, [None] * fleet
         cold_it = warm_it = 0
         cold_util = warm_util = 0.0
+        rho_est = 0.0
         mismatches = 0
         key = jax.random.PRNGKey(seed + 1)
         for t in range(n_epochs):
             envs = sc.env_many(states)
+            if mesh is not None:
+                # place the fleet on the mesh once per epoch; otherwise every
+                # sharded call re-copies it from the default device
+                envs = shard_fleet(envs, mesh)
             # epoch 0 is cold for both engines (replan_many(None) == plan_many),
             # so the cold baseline is only solved for the counted epochs
             cold = cold_eng.plan_many(envs) if t >= 1 else None
@@ -78,6 +96,8 @@ def run_sweep(rhos, fleet, n_epochs, seed, prof_name, cfg, scfg,
                 warm_it += int(jnp.sum(fleet_state.total_iters))
                 cold_util += float(jnp.sum(cold.plan.utility))
                 warm_util += float(jnp.sum(fleet_state.plan.utility))
+                # mean of the in-jit gate estimate across members and epochs
+                rho_est += float(jnp.mean(fleet_state.warm_rho))
             key, k_step = jax.random.split(key)
             step_keys = jax.random.split(k_step, fleet)
             states = sc.step_many(step_keys, states,
@@ -86,9 +106,62 @@ def run_sweep(rhos, fleet, n_epochs, seed, prof_name, cfg, scfg,
             "rho": rho, "fleet": fleet, "epochs": n_epochs,
             "cold_iters": cold_it, "warm_iters": warm_it,
             "cold_util": cold_util, "warm_util": warm_util,
+            "rho_est": rho_est / max(n_epochs - 1, 1),
             "mismatches": mismatches if verify else None,
         })
     return out
+
+
+def check_async_dispatch(prof_name, cfg, scfg, fleet, mesh=None) -> None:
+    """--quick acceptance: a warm replan must *enqueue* without any blocking
+    host transfer. The warm gate, moment decay, and solver all live inside
+    the compiled program, so dispatch under jax.transfer_guard('disallow')
+    must not raise (any host-side numpy would) and must return before the
+    solve completes (block_until_ready does the waiting)."""
+    prof = _profile(prof_name)
+    w = make_weights(scfg.n_users)
+    eng = PlannerEngine(prof, weights=w, cfg=cfg, mesh=mesh)
+    sc = Scenario(scfg)
+
+    def fleet_envs(states):
+        envs = sc.env_many(states)
+        # Place the fleet explicitly on the mesh: steady-state dispatch then
+        # needs no transfers at all (the carried state and the engine
+        # constants already live there).
+        return envs if mesh is None else shard_fleet(envs, mesh)
+
+    key = jax.random.PRNGKey(123)
+    states = sc.init_many(jax.random.split(key, fleet))
+    state = eng.replan_many(None, fleet_envs(states))       # compile cold
+    states = sc.step_many(jax.random.split(jax.random.PRNGKey(124), fleet),
+                          states)
+    state = eng.replan_many(state, fleet_envs(states))      # compile warm
+    jax.block_until_ready(state)
+    states = sc.step_many(jax.random.split(jax.random.PRNGKey(125), fleet),
+                          states)
+    envs = fleet_envs(states)
+    jax.block_until_ready(envs)
+
+    t0 = time.perf_counter()
+    with jax.transfer_guard("disallow"):
+        nxt = eng.replan_many(state, envs)
+        probe = nxt.total_iters
+        pending = not probe.is_ready() if hasattr(probe, "is_ready") else None
+    t_dispatch = time.perf_counter() - t0
+    jax.block_until_ready(nxt)
+    t_total = time.perf_counter() - t0
+    print(f"[async] warm replan_many dispatch {t_dispatch * 1e3:.2f} ms, "
+          f"completion {t_total * 1e3:.2f} ms, pending at dispatch: {pending}")
+    # The transfer guard above is the hard 'no blocking host transfer'
+    # assertion. For async-ness: pending=True proves dispatch returned with
+    # the solve still in flight. pending=False alone is not damning -- a
+    # fast solve (small t_total) can win the race against the probe, and on
+    # a loaded runner the OS can preempt us between dispatch and the probe.
+    # Blocking is only proven when the solve is slow AND the dispatch call
+    # itself consumed that time.
+    if pending is False and t_total >= 0.25 and t_dispatch > 0.5 * t_total:
+        raise SystemExit("FAIL: warm replan dispatch blocked until completion "
+                         f"(dispatch {t_dispatch:.3f}s vs total {t_total:.3f}s)")
 
 
 def run_episode(preset: str, n_epochs: int, seed: int, prof_name: str,
@@ -135,8 +208,11 @@ def main() -> None:
     ap.add_argument("--episode", action="store_true",
                     help="single-scenario preset episode mode (PR 1 report)")
     ap.add_argument("--preset", default="iot_massive", choices=presets.names())
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the fleet over all local devices (shard_map)")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: tiny fleet, 3 epochs, one rho, --verify")
+                    help="CI smoke: tiny fleet, 3 epochs, one rho, --verify, "
+                         "plus the async-dispatch (no host transfer) check")
     args = ap.parse_args()
 
     cfg = GdConfig(step_size=args.step_size, eps=args.eps,
@@ -163,18 +239,32 @@ def main() -> None:
                                    args.verify)
     if args.quick:
         rhos, fleet, epochs, verify = [0.95], 4, 3, True
+    mesh = None
+    if args.mesh:
+        mesh = fleet_mesh()
+        if args.quick and fleet % jax.device_count() != 0:
+            # round the smoke fleet up to a whole number of shards
+            fleet = jax.device_count() * -(-fleet // jax.device_count())
+        if fleet % jax.device_count() != 0:
+            raise SystemExit(f"--mesh needs fleet ({fleet}) divisible by the "
+                             f"device count ({jax.device_count()}); set "
+                             "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                             "or pick a matching --fleet")
+        print(f"mesh: {jax.device_count()} devices over axis "
+              f"'{mesh.axis_names[0]}' (shard_map fleet path)")
     scfg = ScenarioConfig(n_users=args.users, n_aps=args.aps, n_sub=args.subs,
                           speed_mps=0.0, arrival_rate_hz=0.0)
     rows = run_sweep(rhos, fleet, epochs, args.seed, args.profile, cfg, scfg,
-                     verify=verify)
+                     verify=verify, mesh=mesh)
     print(f"fleet={fleet} x {epochs} epochs, U={args.users} N={args.aps} "
           f"M={args.subs}, profile={args.profile} (totals over epochs >= 1)")
-    print(f"{'rho':>7} {'cold_it':>9} {'warm_it':>9} {'saved':>7} "
+    print(f"{'rho':>7} {'rho_est':>8} {'cold_it':>9} {'warm_it':>9} {'saved':>7} "
           f"{'util_cold':>11} {'util_warm':>11}" + ("  mismatch" if verify else ""))
     ok = True
     for r in rows:
         saved = 100.0 * (1 - r["warm_iters"] / max(r["cold_iters"], 1))
-        line = (f"{r['rho']:7.3f} {r['cold_iters']:9d} {r['warm_iters']:9d}"
+        line = (f"{r['rho']:7.3f} {r['rho_est']:8.4f}"
+                f" {r['cold_iters']:9d} {r['warm_iters']:9d}"
                 f" {saved:6.1f}% {r['cold_util']:11.4f} {r['warm_util']:11.4f}")
         if verify:
             line += f"  {r['mismatches']:8d}"
@@ -184,6 +274,8 @@ def main() -> None:
         # acceptance is iterations saved at equal-or-better utility (cost:
         # lower is better); 1% headroom absorbs plateau-stopping noise
         ok = ok and r["warm_util"] <= r["cold_util"] * 1.01
+    if args.quick:
+        check_async_dispatch(args.profile, cfg, scfg, fleet, mesh=mesh)
     if verify and not ok:
         raise SystemExit("FAIL: warm > cold iterations, warm utility worse "
                          "than cold, or batched/sequential replan mismatch")

@@ -1,8 +1,11 @@
 """ECC planning across the 10 assigned LM architectures: how the optimal
 split point moves with the radio environment and QoS weights — plus an
-online re-planning demo over a correlated-fading episode.
+online *fleet* re-planning demo over correlated-fading scenarios, sharded
+across devices when more than one is available.
 
   PYTHONPATH=src python examples/noma_planning.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/noma_planning.py   # sharded fleet demo
 """
 import jax
 import jax.numpy as jnp
@@ -10,6 +13,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.core import GdConfig, make_env, make_weights, planner, profiles
 from repro.planning import PlannerEngine
+from repro.pshard import fleet_mesh, shard_fleet
 from repro.scenarios import Scenario, presets
 
 cfg_gd = GdConfig(max_iters=150)
@@ -19,37 +23,57 @@ env = make_env(jax.random.PRNGKey(0), n_users=12, n_aps=3, n_sub=4)
 for name in configs.all_names():
     arch = configs.get(name)
     prof = profiles.from_arch_config(arch, seq=128)
+    engine = PlannerEngine(prof, cfg=cfg_gd)
     row = []
     for wt in (0.2, 0.5, 0.8):
-        w = make_weights(env.n_users, wt)
-        plan = planner.plan(env, prof, w, cfg_gd)
-        row.append(f"{int(plan.s):3d}/{arch.n_layers}")
+        state = engine.plan(env, make_weights(env.n_users, wt))
+        row.append(f"{int(state.plan.s):3d}/{arch.n_layers}")
     print(f"{name:26s} {row[0]:>8s} {row[1]:>8s} {row[2]:>8s}")
 
 print("\nHigher w_T (latency matters more) pushes the split toward the edge"
       "\n(s* -> 0, full offload); higher w_E keeps layers on the device.")
 
+# The pre-engine facade still works (deprecated; one call to keep it covered):
+legacy = planner.plan(env, profiles.nin(), make_weights(env.n_users), cfg_gd)
+fresh = PlannerEngine(profiles.nin(), cfg=cfg_gd).plan(env)
+assert int(legacy.s) == int(fresh.plan.s), "facade drifted from the engine"
+
 # --------------------------------------------------------------------------
-# Online re-planning: a hotspot scenario with time-correlated fading. The
-# engine warm-starts each epoch from the previous optimum, so tracking the
-# channel costs a fraction of a fresh solve.
+# Online fleet re-planning: B independent hotspot scenarios with correlated
+# fading evolve in parallel; one compiled program warm-starts all of them
+# each epoch. With multiple devices the fleet is sharded over a mesh
+# (shard_map) and the whole loop dispatches asynchronously — nothing syncs
+# to host except the printed report.
 # --------------------------------------------------------------------------
 scfg = presets.get("iot_massive")
-print(f"\nOnline episode: preset={scfg.name}, U={scfg.n_users}, "
-      f"N={scfg.n_aps}, M={scfg.n_sub}, fading rho={scfg.rho:.3f}")
-prof = profiles.nin()
+fleet = max(1, jax.device_count())
+mesh = fleet_mesh() if jax.device_count() > 1 else None
+print(f"\nOnline fleet: preset={scfg.name}, U={scfg.n_users}, N={scfg.n_aps}, "
+      f"M={scfg.n_sub}, fading rho={scfg.rho:.3f}, B={fleet}"
+      + (f", sharded over {jax.device_count()} devices" if mesh else " (vmap)"))
 engine = PlannerEngine(
-    prof,
+    profiles.nin(),
     weights=make_weights(scfg.n_users),
     cfg=GdConfig(step_size=1e-2, eps=1e-4, max_iters=400, optimizer="adam"),
+    mesh=mesh,
 )
-state = None
-print(f"{'epoch':>5} {'s*':>4} {'gd_iters':>9} {'utility':>9}")
-for t, env in enumerate(Scenario(scfg).episode(jax.random.PRNGKey(7), 8)):
-    state = engine.replan(state, env)
-    print(f"{t:5d} {int(state.plan.s):4d} {int(state.total_iters):9d}"
-          f" {float(state.plan.utility):9.4f}")
-print("Epoch 0 is a cold solve; later epochs warm-start from the previous"
-      "\noptimum and need far fewer GD iterations when the channel stays"
-      "\ncorrelated (Corollary 4, applied across time). See"
-      "\nbenchmarks/online_replan.py for the warm-vs-cold comparison.")
+sc = Scenario(scfg)
+states = sc.init_many(jax.random.split(jax.random.PRNGKey(7), fleet))
+plan_state, key = None, jax.random.PRNGKey(8)
+print(f"{'epoch':>5} {'gd_iters':>9} {'mean_util':>10} {'mean_rho_est':>13} {'s*':>12}")
+for t in range(6):
+    envs = sc.env_many(states)
+    if mesh is not None:
+        envs = shard_fleet(envs, mesh)   # place the fleet on the mesh once
+    plan_state = engine.replan_many(plan_state, envs)
+    rho_est = ("      (cold)" if plan_state.warm_rho is None
+               else f"{float(jnp.mean(plan_state.warm_rho)):13.4f}")
+    print(f"{t:5d} {int(jnp.sum(plan_state.total_iters)):9d}"
+          f" {float(jnp.mean(plan_state.plan.utility)):10.4f} {rho_est}"
+          f" {str(list(map(int, plan_state.plan.s))):>12}")
+    key, k = jax.random.split(key)
+    states = sc.step_many(jax.random.split(k, fleet), states)
+print("Epoch 0 is a cold solve; later epochs warm-start every fleet member"
+      "\nfrom its previous optimum on device (the rho gate and Adam resume"
+      "\nare traced into the compiled program). See benchmarks/online_replan.py"
+      "\nfor warm-vs-cold numbers and the --mesh sharded mode.")

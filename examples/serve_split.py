@@ -1,6 +1,9 @@
-"""End-to-end split serving: ECC plans the split for an LM architecture,
-then batched requests run through the device-stage / edge-stage programs
-(the paper's deployment, with the NOMA uplink simulated).
+"""End-to-end split serving: a PlannerEngine plans the split for an LM
+architecture, then batched requests run through the device-stage /
+edge-stage programs (the paper's deployment, with the NOMA uplink
+simulated). An online deployment keeps the engine and feeds the returned
+PlanState back through engine.replan() as the channel evolves — see
+runtime.serve.OnlineSplitServer.
 
   PYTHONPATH=src python examples/serve_split.py --arch qwen1.5-0.5b
 """

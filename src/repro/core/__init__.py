@@ -33,6 +33,7 @@ from repro.core.li_gd import (  # noqa: F401
     plain_gd_loop,
     project_simplex,
     project_simplex_floor,
+    rho_estimate,
     greedy_round_dn,
     greedy_round_up,
     round_beta,

@@ -106,6 +106,30 @@ def cold_init(env: NetworkEnv) -> dict:
 
 
 # --------------------------------------------------------------------------
+# online warm-gate: epoch-to-epoch channel correlation, traced in jax
+# --------------------------------------------------------------------------
+def rho_estimate(prev_gains: Array, gains: Array) -> Array:
+    """Estimate the epoch-to-epoch fading correlation rho from two gain
+    tensors of one scenario (vmap for fleets). For the Gauss-Markov process
+    corr(|h_t|^2, |h_{t+1}|^2) = rho^2, so rho_hat = sqrt(clip(corr, 0, 1)).
+
+    Pure jnp so the estimate lives *inside* the compiled replan program: the
+    warm-vs-cold gate is selected on device and dispatch never syncs to host.
+    Gains are path-loss scaled (~1e-12 at paper geometry), so both tensors
+    are max-normalized before the correlation -- it is scale-invariant and
+    this keeps the fp32 sums far from underflow."""
+    a = prev_gains.reshape(-1).astype(jnp.float32)
+    b = gains.reshape(-1).astype(jnp.float32)
+    a = a / jnp.maximum(jnp.max(jnp.abs(a)), 1e-30)
+    b = b / jnp.maximum(jnp.max(jnp.abs(b)), 1e-30)
+    a = a - jnp.mean(a)
+    b = b - jnp.mean(b)
+    denom = jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))
+    corr = jnp.sum(a * b) / jnp.maximum(denom, 1e-30)
+    return jnp.sqrt(jnp.clip(corr, 0.0, 1.0))
+
+
+# --------------------------------------------------------------------------
 # single-split-point projected GD (Table I lines 3-12)
 # --------------------------------------------------------------------------
 class GdResult(NamedTuple):

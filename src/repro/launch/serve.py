@@ -19,9 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import GdConfig, make_env, make_weights, planner, profiles
+from repro.core import GdConfig, make_env, make_weights, profiles
 from repro.data import make_batch
 from repro.models import Model
+from repro.planning import PlannerEngine
 from repro.runtime.serve import make_split_serve, transfer_seconds
 from repro.core import channel
 
@@ -44,12 +45,15 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
-    # 1. ECC planning over the arch's per-block profile
+    # 1. ECC planning over the arch's per-block profile. The PlannerEngine
+    # owns the compiled solver; a serving deployment keeps it around and
+    # replan()s the returned state as the channel evolves.
     env = make_env(jax.random.PRNGKey(args.seed), args.users, args.aps,
                    args.subchannels)
     prof = profiles.from_arch_config(cfg, seq=args.seq)
     w = make_weights(env.n_users, args.w_delay)
-    plan = planner.plan(env, prof, w, GdConfig(max_iters=150))
+    engine = PlannerEngine(prof, weights=w, cfg=GdConfig(max_iters=150))
+    plan = engine.plan(env).plan
     s = int(plan.s)
     r_up, _ = channel.user_rates(
         env,

@@ -1,14 +1,17 @@
 """PlannerEngine: the unified entry point for single-shot, batched, and
-online warm-started ECC planning.
+online warm-started ECC planning -- single scenarios, vmapped fleets, and
+mesh-sharded fleets.
 
 The engine owns a cache of compiled solver programs keyed on
 (entry kind, env shape, GdConfig, method, rounding), so a serving loop that
-re-plans every epoch pays tracing/compilation once per network shape. Three
+re-plans every epoch pays tracing/compilation once per network shape. The
 entry points share the cache:
 
   plan(env)             -- one-shot solve (the paper's Table I).
   plan_many(envs)       -- vmapped Monte-Carlo over stacked realizations
-                           (one compiled program optimizes all draws).
+                           (one compiled program optimizes all draws). With a
+                           mesh attached (mesh=... or engine.shard(mesh)) the
+                           fleet dim is split across devices via shard_map.
   replan(prev, env)     -- online Li-GD: every split point warm-starts from
                            the previous epoch's normalized optimum at the
                            same split *and resumes its Adam moments*, so the
@@ -18,21 +21,29 @@ entry points share the cache:
                            the paper's warm-start argument (Corollary 4)
                            applied across *time* instead of across split
                            points.
-  replan_many(prev, envs) -- the vmapped replan: a fleet of scenarios
-                           evolving in parallel, one compiled program.
+  replan_many(prev, envs) -- the fleet replan: scenarios evolving in
+                           parallel, one compiled program; sharded over the
+                           mesh when one is attached (the carried PlanState
+                           payload is donated to XLA on that path).
 
 All entry points return a PlanState carrying the discrete SplitPlan plus the
 solver state needed to warm-start the next epoch: the stacked normalized
 optima, the per-split Adam moments and step counts, and the epoch's uplink
-gains. The gains feed a rho-adaptive selector: replan estimates the
-epoch-to-epoch channel correlation between the stored and observed gains and
-disables the temporal warm starts (use_warm=False -> the compiled warm
-program runs an exact cold Li-GD chain) for any scenario whose estimate
-drops below `warm_rho_min` -- at low correlation the previous optimum is
-stale and warm-starting from it costs iterations instead of saving them.
-Independently of the selector, each split point only adopts the temporal
-start when one utility probe says it beats the fresh chain carry, so replan
-is never structurally worse than a cold sweep.
+gains.
+
+Everything in the replan dispatch path is device-resident: the rho-adaptive
+warm gate -- estimate the epoch-to-epoch channel correlation between the
+stored and observed gains, and run the exact cold Li-GD chain instead of the
+temporal warm starts for any scenario whose estimate drops below
+`warm_rho_min` -- is computed *inside* the compiled program
+(li_gd.rho_estimate + a traced use_warm select), as is the Adam-moment
+decay. replan/replan_many therefore enqueue asynchronously with zero host
+syncs; the estimate itself is returned as PlanState.warm_rho. At low
+correlation the previous optimum is stale and warm-starting from it costs
+iterations instead of saving them. Independently of the gate, each split
+point only adopts the temporal start when one utility probe says it beats
+the fresh chain carry, so replan is never structurally worse than a cold
+sweep.
 """
 from __future__ import annotations
 
@@ -41,7 +52,12 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 promoted shard_map out of experimental
+    from jax import shard_map as _shard_map_impl  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
 
 from repro.core import li_gd
 from repro.core.types import (
@@ -53,15 +69,31 @@ from repro.core.types import (
     SplitPlan,
     make_weights,
 )
+from repro.pshard import axis_size, fleet_axis
+
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """shard_map with replication checking off: the solver's lax.while_loop
+    has no replication rule on older jax, and every output here is fully
+    fleet-sharded anyway. Newer jax renamed/dropped the kwarg."""
+    try:
+        return _shard_map_impl(fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map_impl(fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
 
 
 class WarmStateShapeError(ValueError):
     """A warm-start PlanState does not fit the observed network shape
-    (user/AP/subchannel count changed); re-plan cold instead."""
+    (user/AP/subchannel count changed, or a fleet state was handed to the
+    single-scenario entry point and vice versa); re-plan cold instead."""
 
 
 class PlanState(NamedTuple):
-    """A plan plus the solver state needed to warm-start the next epoch."""
+    """A plan plus the solver state needed to warm-start the next epoch.
+    All leaves are device arrays: the state round-trips through
+    replan/replan_many without ever being pulled to host."""
 
     plan: SplitPlan
     norms: dict          # per-split normalized optima, leaves lead with (F+1, ...)
@@ -69,6 +101,8 @@ class PlanState(NamedTuple):
     moms: tuple | None = None      # per-split Adam moments (m1, m2), leaves (F+1, ...)
     opt_steps: Array | None = None # (F+1,) int32 optimizer steps behind `moms`
     gains: Array | None = None     # g_up of the planned epoch (rho estimation)
+    warm_rho: Array | None = None  # () in-jit rho estimate behind the warm gate
+                                   # (None when the state came from a cold plan)
 
 
 def stack_envs(envs: Sequence[NetworkEnv]) -> NetworkEnv:
@@ -84,38 +118,43 @@ def member(tree, i: int):
                         tree)
 
 
+def _strong_typed(tree):
+    """Strip weak types from every leaf. The cold and warm solver programs
+    must emit byte-identical PlanState avals: a weak-f32 leaf from the cold
+    program would re-trace the warm program once on the first replan (and
+    again on the second, when the warm output feeds back)."""
+    return jax.tree.map(
+        lambda x: jax.lax.convert_element_type(x, x.dtype)
+        if getattr(x, "weak_type", False) else x, tree)
+
+
 def _solve_state(env, prof, w, cfg, method, rounding) -> PlanState:
     loop = li_gd.gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
     plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
-    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
-                     moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up)
+    return _strong_typed(
+        PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
+                  moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up))
 
 
-def _resolve_state(env, prof, w, warm, warm_mom, warm_steps, use_warm,
-                   cfg, method, rounding) -> PlanState:
+def _resolve_state(env, prof, w, warm, warm_mom, warm_steps, prev_gains,
+                   cfg, method, rounding, warm_rho_min,
+                   warm_moment_decay) -> PlanState:
+    """The fully traced replan program: rho gate, moment decay, warm solve,
+    and plan assembly all happen on device inside one compiled call."""
     del method  # warm mode supersedes the chain-vs-cold distinction
+    rho = li_gd.rho_estimate(prev_gains, env.g_up)
+    # warm_rho_min is a trace-time constant per engine; rho is in [0, 1], so
+    # warm_rho_min <= 0 means the gate is always open (fallback disabled).
+    use_warm = rho >= warm_rho_min
+    if warm_moment_decay != 1.0:
+        warm_mom = jax.tree.map(lambda x: warm_moment_decay * x, warm_mom)
     loop = li_gd.gd_loop(env, prof, w, cfg, warm=warm, warm_mom=warm_mom,
                          warm_steps=warm_steps, use_warm=use_warm)
     plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
-    return PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
-                     moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up)
-
-
-def _rho_estimate(prev_gains: Array, gains: Array) -> np.ndarray:
-    """Estimate the epoch-to-epoch fading correlation rho from two gain
-    tensors (per fleet member when batched). For the Gauss-Markov process
-    corr(|h_t|^2, |h_{t+1}|^2) = rho^2, so rho_hat = sqrt(clip(corr, 0, 1))."""
-    a = np.asarray(prev_gains, dtype=np.float64)
-    b = np.asarray(gains, dtype=np.float64)
-    batched = a.ndim > 3
-    a = a.reshape(a.shape[0] if batched else 1, -1)
-    b = b.reshape(b.shape[0] if batched else 1, -1)
-    a = a - a.mean(axis=1, keepdims=True)
-    b = b - b.mean(axis=1, keepdims=True)
-    denom = np.sqrt((a * a).sum(axis=1) * (b * b).sum(axis=1))
-    corr = (a * b).sum(axis=1) / np.maximum(denom, 1e-30)
-    rho = np.sqrt(np.clip(corr, 0.0, 1.0))
-    return rho if batched else rho[0]
+    return _strong_typed(
+        PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
+                  moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up,
+                  warm_rho=rho))
 
 
 class PlannerEngine:
@@ -123,20 +162,29 @@ class PlannerEngine:
 
     method: 'li_gd' (paper warm-start chain) or 'gd' (cold-start baseline).
     rounding: 'best' | 'greedy' | 'paper' (see li_gd.assemble_plan).
-    warm_rho_min: replan's rho-adaptive selector -- a scenario whose
-        estimated epoch-to-epoch correlation falls below this threshold has
-        its temporal warm starts disabled (the compiled warm program then
-        runs the exact cold Li-GD chain), because a stale optimum is a worse
-        start than no prior at all. 0.0 disables the fallback.
-    warm_moment_decay: factor applied to the carried Adam moments on resume.
-        The sweet spot is a *softened* restart: carrying the moments verbatim
-        steers the new epoch with a stale direction and over-remembered
-        scale (slightly worse optima), while zeroing them re-biases Adam
-        from t=0 and its sign-like opening steps walk away from the
-        near-optimal start (many extra iterations). Decaying both moments --
-        with the step count carried so bias correction does not re-amplify
-        them -- keeps per-coordinate scale memory but lets fresh gradients
-        dominate within a few steps. 1.0 resumes verbatim, 0.0 zeroes.
+    mesh: optional jax.sharding.Mesh. When set, plan_many/replan_many run
+        via shard_map with the fleet dim split over the mesh's fleet axis
+        ('fleet' when present, else the first axis); the fleet size must be
+        divisible by that axis. The carried warm-start payload is donated to
+        XLA on the sharded replan path (the engine returns the next epoch's
+        state, so the previous one is dead weight). engine.shard(mesh) is
+        the fluent variant: a sharded twin of an existing engine.
+    warm_rho_min: replan's rho-adaptive gate -- a scenario whose estimated
+        epoch-to-epoch correlation falls below this threshold has its
+        temporal warm starts disabled (the compiled warm program then runs
+        the exact cold Li-GD chain), because a stale optimum is a worse
+        start than no prior at all. The estimate and the gate are traced
+        into the compiled program (no host sync); 0.0 disables the fallback.
+    warm_moment_decay: factor applied to the carried Adam moments on resume
+        (inside the compiled program). The sweet spot is a *softened*
+        restart: carrying the moments verbatim steers the new epoch with a
+        stale direction and over-remembered scale (slightly worse optima),
+        while zeroing them re-biases Adam from t=0 and its sign-like opening
+        steps walk away from the near-optimal start (many extra iterations).
+        Decaying both moments -- with the step count carried so bias
+        correction does not re-amplify them -- keeps per-coordinate scale
+        memory but lets fresh gradients dominate within a few steps.
+        1.0 resumes verbatim, 0.0 zeroes.
     """
 
     def __init__(
@@ -148,6 +196,7 @@ class PlannerEngine:
         rounding: str = "best",
         warm_rho_min: float = 0.5,
         warm_moment_decay: float = 0.1,
+        mesh: Mesh | None = None,
     ):
         if method not in ("li_gd", "gd"):
             raise KeyError(method)
@@ -156,39 +205,114 @@ class PlannerEngine:
         if not 0.0 <= warm_moment_decay <= 1.0:
             raise ValueError(
                 f"warm_moment_decay must be in [0, 1], got {warm_moment_decay}")
-        self.prof = prof
-        self.weights = weights
+        if mesh is not None and not mesh.axis_names:
+            raise ValueError("mesh must have at least one axis")
+        self._prof = prof
+        self._weights = weights
+        if mesh is None:
+            self._prof_rep = self._weights_rep = None
+        else:
+            # Pre-place replicated copies of the engine constants over the
+            # mesh once, so steady-state *sharded* dispatch needs no implicit
+            # transfers (fleet-batched inputs are the caller's:
+            # pshard.shard_fleet). The originals stay unplaced: the
+            # single-scenario plan/replan programs are not mesh programs and
+            # would reject mixed device commitments.
+            rep = NamedSharding(mesh, P())
+            self._prof_rep = jax.device_put(prof, rep)
+            self._weights_rep = (None if weights is None
+                                 else jax.device_put(weights, rep))
         self.cfg = cfg
         self.method = method
         self.rounding = rounding
         self.warm_rho_min = warm_rho_min
         self.warm_moment_decay = warm_moment_decay
+        self._mesh = mesh
         self._cache: dict[tuple, object] = {}
+
+    @property
+    def mesh(self) -> Mesh | None:
+        """Read-only: the replicated constants and the compiled fleet
+        programs are lowered per mesh, so swap meshes via shard(), not by
+        assigning the attribute."""
+        return self._mesh
+
+    @property
+    def prof(self) -> ModelProfile:
+        """Read-only: mesh engines hold a replicated copy baked at
+        construction; build a new engine for a different profile."""
+        return self._prof
+
+    @property
+    def weights(self) -> EccWeights | None:
+        """Read-only: mesh engines hold a replicated copy baked at
+        construction; pass per-call weights or build a new engine."""
+        return self._weights
+
+    def shard(self, mesh: Mesh | None) -> "PlannerEngine":
+        """A twin of this engine whose fleet entry points run shard_map over
+        `mesh` (None returns a plain vmapped twin). The compiled-program
+        cache is not shared: sharded programs are lowered per mesh."""
+        return PlannerEngine(
+            self.prof, weights=self.weights, cfg=self.cfg, method=self.method,
+            rounding=self.rounding, warm_rho_min=self.warm_rho_min,
+            warm_moment_decay=self.warm_moment_decay, mesh=mesh,
+        )
 
     # -- compiled-program cache ------------------------------------------
     def _env_shape(self, env: NetworkEnv) -> tuple:
         return tuple(env.g_up.shape)
 
+    def _fleet_axis_size(self) -> int:
+        return axis_size(self.mesh, fleet_axis(self.mesh))
+
+    def _check_fleet_divisible(self, b: int):
+        nd = self._fleet_axis_size()
+        if b % nd != 0:
+            raise ValueError(
+                f"fleet size {b} is not divisible by the mesh fleet axis "
+                f"'{fleet_axis(self.mesh)}' ({nd} devices); pad the fleet or "
+                "use a divisor-sized mesh (repro.pshard.fleet_mesh(n))")
+
     def _compiled(self, kind: str, env: NetworkEnv):
-        key = (kind, self._env_shape(env), self.cfg, self.method, self.rounding)
+        # warm_rho_min / warm_moment_decay are trace-time constants of the
+        # compiled replan programs, so they belong in the key: retuning them
+        # on a live engine must recompile, not silently keep the old gate.
+        key = (kind, self._env_shape(env), self.cfg, self.method, self.rounding,
+               self.warm_rho_min, self.warm_moment_decay)
         fn = self._cache.get(key)
         if fn is None:
+            solve = functools.partial(_solve_state, cfg=self.cfg,
+                                      method=self.method, rounding=self.rounding)
+            resolve = functools.partial(
+                _resolve_state, cfg=self.cfg, method=self.method,
+                rounding=self.rounding, warm_rho_min=self.warm_rho_min,
+                warm_moment_decay=self.warm_moment_decay)
             if kind == "plan":
-                base = functools.partial(_solve_state, cfg=self.cfg,
-                                         method=self.method, rounding=self.rounding)
-                fn = jax.jit(base)
+                fn = jax.jit(solve)
             elif kind == "plan_many":
-                base = functools.partial(_solve_state, cfg=self.cfg,
-                                         method=self.method, rounding=self.rounding)
-                fn = jax.jit(jax.vmap(base, in_axes=(0, None, None)))
+                fn = jax.jit(jax.vmap(solve, in_axes=(0, None, None)))
             elif kind == "replan":
-                base = functools.partial(_resolve_state, cfg=self.cfg,
-                                         method=self.method, rounding=self.rounding)
-                fn = jax.jit(base)
+                fn = jax.jit(resolve)
             elif kind == "replan_many":
-                base = functools.partial(_resolve_state, cfg=self.cfg,
-                                         method=self.method, rounding=self.rounding)
-                fn = jax.jit(jax.vmap(base, in_axes=(0, None, None, 0, 0, 0, 0)))
+                fn = jax.jit(jax.vmap(resolve, in_axes=(0, None, None, 0, 0, 0, 0)))
+            elif kind == "plan_many_sharded":
+                ax = fleet_axis(self.mesh)
+                fn = jax.jit(_shard_map(
+                    jax.vmap(solve, in_axes=(0, None, None)), mesh=self.mesh,
+                    in_specs=(P(ax), P(), P()), out_specs=P(ax)))
+            elif kind == "replan_many_sharded":
+                ax = fleet_axis(self.mesh)
+                # The carried payload (norms, moms, steps) is donated: the
+                # caller threads the *returned* PlanState to the next epoch,
+                # so XLA may reuse the previous epoch's buffers in place.
+                fn = jax.jit(
+                    _shard_map(
+                        jax.vmap(resolve, in_axes=(0, None, None, 0, 0, 0, 0)),
+                        mesh=self.mesh,
+                        in_specs=(P(ax), P(), P(), P(ax), P(ax), P(ax), P(ax)),
+                        out_specs=P(ax)),
+                    donate_argnums=(3, 4, 5))
             else:
                 raise KeyError(kind)
             self._cache[key] = fn
@@ -197,12 +321,35 @@ class PlannerEngine:
     def cache_size(self) -> int:
         return len(self._cache)
 
-    def _w(self, env: NetworkEnv, weights, n_users: int | None = None) -> EccWeights:
-        if weights is not None:
-            return weights
-        if self.weights is not None:
-            return self.weights
-        return make_weights(env.n_users if n_users is None else n_users)
+    def _w(self, env: NetworkEnv, weights, n_users: int | None = None,
+           sharded: bool = False) -> EccWeights:
+        if weights is None:
+            if self.weights is not None:
+                return self._weights_rep if sharded else self.weights
+            weights = make_weights(env.n_users if n_users is None else n_users)
+        if sharded:
+            # Caller-supplied (or freshly derived) weights: replicate them
+            # over the mesh explicitly, or every sharded dispatch pays an
+            # implicit reshard (and trips jax.transfer_guard('disallow')).
+            return jax.device_put(weights, NamedSharding(self.mesh, P()))
+        return weights
+
+    # -- warm-state shape validation (host metadata only, no device sync) --
+    @staticmethod
+    def _warm_dims(prev: PlanState) -> tuple[int | None, tuple[int, int]]:
+        """(fleet size | None, (U, M)) read off a PlanState's norms. Leaves
+        are (F+1, U, M) for a single scenario and (B, F+1, U, M) for a
+        fleet; the trailing two dims are the network shape in both cases."""
+        beta = prev.norms["beta_up"]
+        nd = getattr(beta, "ndim", 0)
+        if nd == 3:
+            return None, tuple(beta.shape[-2:])
+        if nd == 4:
+            return int(beta.shape[0]), tuple(beta.shape[-2:])
+        raise WarmStateShapeError(
+            f"warm-start norms have rank-{nd} leaves {tuple(beta.shape)}; "
+            "expected (F+1, U, M) for a single scenario or (B, F+1, U, M) "
+            "for a fleet")
 
     # -- entry points ----------------------------------------------------
     def plan(self, env: NetworkEnv, weights: EccWeights | None = None) -> PlanState:
@@ -216,39 +363,42 @@ class PlannerEngine:
     ) -> PlanState:
         """Batched Monte-Carlo solve: `envs` is either a list of same-shape
         environments or a NetworkEnv whose array leaves carry a leading
-        batch dim. Returns a PlanState with the same leading dim."""
+        batch dim. Returns a PlanState with the same leading dim. With a
+        mesh attached, the batch is split over the fleet axis (shard_map);
+        otherwise it is vmapped on one device."""
         if not isinstance(envs, NetworkEnv):
             envs = list(envs)
             if not envs:
                 raise ValueError("plan_many needs at least one environment")
             envs = stack_envs(envs)
+        if getattr(envs.g_up, "ndim", 0) != 4:
+            raise ValueError(
+                f"plan_many expects stacked envs with g_up (B, U, N, M); got "
+                f"{tuple(envs.g_up.shape)} -- use plan() for a single "
+                "scenario")
+        if self.mesh is not None:
+            self._check_fleet_divisible(envs.g_up.shape[0])
+            w = self._w(envs, weights, n_users=envs.g_up.shape[1], sharded=True)
+            return self._compiled("plan_many_sharded", envs)(
+                envs, self._prof_rep, w)
         w = self._w(envs, weights, n_users=envs.g_up.shape[1])
         return self._compiled("plan_many", envs)(envs, self.prof, w)
 
-    # -- warm-start payload assembly -------------------------------------
-    def _warm_payload(self, prev: PlanState, gains: Array):
-        """(norms, moms, steps, use_warm) from a previous PlanState. `gains`
-        is the new epoch's g_up -- (U, N, M) for a single scenario,
-        (B, U, N, M) for a fleet -- compared against prev.gains to estimate
-        the epoch-to-epoch correlation; use_warm (scalar / per-member (B,))
-        disables the temporal warm starts for scenarios whose estimate fell
-        below warm_rho_min (the compiled warm program then degrades to an
-        exact cold Li-GD chain for them)."""
+    # -- warm-start payload assembly (pure device ops, dispatches async) --
+    def _warm_args(self, prev: PlanState, gains: Array):
+        """(norms, moms, steps, prev_gains) handed to the compiled replan.
+        Everything stays on device: missing moments/steps are zero-filled
+        with device ops, and a missing gains record falls back to the new
+        epoch's gains (rho estimate 1 -> gate open), matching the legacy
+        'no history, trust the warm start' behavior."""
         norms, moms, steps = prev.norms, prev.moms, prev.opt_steps
         if moms is None:
             moms = (jax.tree.map(jnp.zeros_like, norms),
                     jax.tree.map(jnp.zeros_like, norms))
-        elif self.warm_moment_decay != 1.0:
-            moms = jax.tree.map(lambda x: self.warm_moment_decay * x, moms)
         if steps is None:
             steps = jnp.zeros(norms["beta_up"].shape[:-2], jnp.int32)
-        batched = gains.ndim > 3
-        if self.warm_rho_min <= 0.0 or prev.gains is None:
-            use_warm = np.ones((gains.shape[0],), bool) if batched else True
-        else:
-            rho = _rho_estimate(prev.gains, gains)
-            use_warm = rho >= self.warm_rho_min
-        return norms, moms, steps, jnp.asarray(use_warm)
+        prev_gains = gains if prev.gains is None else prev.gains
+        return norms, moms, steps, prev_gains
 
     def replan(
         self,
@@ -260,24 +410,31 @@ class PlannerEngine:
         every split point starts from the better of `prev.norms[s]` (resuming
         its Adam moments/step counts, so early stopping fires as soon as the
         tracked optimum is re-attained) and the fresh Li-GD chain carry.
-        Falls back to a cold plan() when there is no previous state, and
-        disables the temporal starts entirely (use_warm=False -> exact cold
-        Li-GD chain, same compiled program) when the estimated epoch-to-epoch
-        correlation is below `warm_rho_min`."""
+        Falls back to a cold plan() when there is no previous state. The
+        rho-adaptive gate runs inside the compiled program: when the
+        estimated epoch-to-epoch correlation is below `warm_rho_min` the
+        temporal starts are disabled on device (use_warm=False -> exact cold
+        Li-GD chain, same program). The call dispatches asynchronously --
+        shape validation below reads array metadata only."""
         if prev is None:
             return self.plan(env, weights)
-        warm_shape = tuple(prev.norms["beta_up"].shape[1:])
-        if warm_shape != (env.n_users, env.n_sub) or (
+        fleet, warm_um = self._warm_dims(prev)
+        if fleet is not None:
+            raise WarmStateShapeError(
+                f"fleet-batched PlanState (B={fleet}) passed to replan(); "
+                "use replan_many() for fleets, or planning.member(state, i) "
+                "to re-plan one member")
+        if warm_um != (env.n_users, env.n_sub) or (
                 prev.gains is not None
                 and tuple(prev.gains.shape) != tuple(env.g_up.shape)):
             raise WarmStateShapeError(
-                f"warm-start state is for a (U, M)={warm_shape} network but the "
+                f"warm-start state is for a (U, M)={warm_um} network but the "
                 f"new env has {tuple(env.g_up.shape)}; scenario shapes (users, "
                 "APs, subchannels) must stay static across epochs (use plan() "
                 "after a shape change)")
-        norms, moms, steps, use_warm = self._warm_payload(prev, env.g_up)
+        norms, moms, steps, prev_gains = self._warm_args(prev, env.g_up)
         return self._compiled("replan", env)(
-            env, self.prof, self._w(env, weights), norms, moms, steps, use_warm
+            env, self.prof, self._w(env, weights), norms, moms, steps, prev_gains
         )
 
     def replan_many(
@@ -286,32 +443,52 @@ class PlannerEngine:
         envs: NetworkEnv | Sequence[NetworkEnv],
         weights: EccWeights | None = None,
     ) -> PlanState:
-        """Batched replan: a fleet of scenarios evolving in parallel, all
-        warm-started in one compiled vmapped program. `prev` is the batched
-        PlanState from the previous epoch's plan_many/replan_many (leaves lead
-        with the fleet dim); `envs` is a stacked NetworkEnv or a list of
-        same-shape environments. The rho-adaptive fallback applies per fleet
-        member: stale members run the exact cold Li-GD chain, fresh members
-        resume their Adam trajectory."""
+        """Fleet replan: scenarios evolving in parallel, all warm-started in
+        one compiled program -- vmapped on one device, or shard_map over the
+        mesh's fleet axis when one is attached (the carried payload is
+        donated on that path; do not reuse `prev` afterwards). `prev` is the
+        batched PlanState from the previous epoch's plan_many/replan_many
+        (leaves lead with the fleet dim); `envs` is a stacked NetworkEnv or
+        a list of same-shape environments. The rho-adaptive gate applies per
+        fleet member inside the program: stale members run the exact cold
+        Li-GD chain, fresh members resume their Adam trajectory."""
         if not isinstance(envs, NetworkEnv):
             envs = list(envs)
             if not envs:
                 raise ValueError("replan_many needs at least one environment")
             envs = stack_envs(envs)
+        if getattr(envs.g_up, "ndim", 0) != 4:
+            raise WarmStateShapeError(
+                f"replan_many expects stacked envs with g_up (B, U, N, M); "
+                f"got {tuple(envs.g_up.shape)} -- use replan() for a single "
+                "scenario")
         if prev is None:
             return self.plan_many(envs, weights)
         b, u, m = envs.g_up.shape[0], envs.g_up.shape[1], envs.g_up.shape[3]
-        warm_shape = tuple(prev.norms["beta_up"].shape)
-        if warm_shape[:1] + warm_shape[2:] != (b, u, m) or (
+        fleet, warm_um = self._warm_dims(prev)
+        if fleet is None:
+            raise WarmStateShapeError(
+                f"single-scenario PlanState (norms leaves "
+                f"{tuple(prev.norms['beta_up'].shape)}) passed to "
+                "replan_many(); fleet states carry a leading fleet dim -- "
+                "start from plan_many(), or use replan() for one scenario")
+        if (fleet, *warm_um) != (b, u, m) or (
                 prev.gains is not None
                 and tuple(prev.gains.shape) != tuple(envs.g_up.shape)):
             raise WarmStateShapeError(
-                f"warm-start state with leaves {warm_shape} does not match the "
-                f"stacked envs {tuple(envs.g_up.shape)}; fleet and scenario "
-                "shapes must stay static across epochs (use plan_many() after "
-                "a shape change)")
+                f"warm-start state is for a fleet of {fleet} (U, M)={warm_um} "
+                f"networks but the stacked envs have g_up "
+                f"{tuple(envs.g_up.shape)}; fleet and scenario shapes must "
+                "stay static across epochs (use plan_many() after a shape "
+                "change)")
+        norms, moms, steps, prev_gains = self._warm_args(prev, envs.g_up)
+        if self.mesh is not None:
+            self._check_fleet_divisible(b)
+            w = self._w(envs, weights, n_users=u, sharded=True)
+            return self._compiled("replan_many_sharded", envs)(
+                envs, self._prof_rep, w, norms, moms, steps, prev_gains
+            )
         w = self._w(envs, weights, n_users=u)
-        norms, moms, steps, use_warm = self._warm_payload(prev, envs.g_up)
         return self._compiled("replan_many", envs)(
-            envs, self.prof, w, norms, moms, steps, use_warm
+            envs, self.prof, w, norms, moms, steps, prev_gains
         )

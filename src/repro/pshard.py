@@ -23,8 +23,42 @@ RULES: dict[str | None, str | tuple | None] = {
     "batch": ("pod", "data"),
     "seq": None,
     "kvseq": "model",        # decode KV-cache sequence sharding (flash-decode)
+    "fleet": "fleet",        # planner fleet axis (one scenario batch per device)
     None: None,
 }
+
+
+FLEET_AXIS = "fleet"
+
+
+def fleet_mesh(n_devices: int | None = None, axis: str = FLEET_AXIS) -> Mesh:
+    """A 1-D mesh over the (first n) local devices for fleet planning:
+    PlannerEngine.shard(fleet_mesh()) runs plan_many/replan_many via
+    shard_map with the fleet dim split across devices."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    return Mesh(np.asarray(devs), (axis,))
+
+
+def fleet_axis(mesh: Mesh) -> str:
+    """The mesh axis carrying the fleet dim: 'fleet' when present, else the
+    first axis (so a plain 1-D ('data',) mesh also works)."""
+    if FLEET_AXIS in mesh.shape:
+        return FLEET_AXIS
+    return mesh.axis_names[0]
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding splitting the leading (fleet) dim over the mesh."""
+    return NamedSharding(mesh, P(fleet_axis(mesh)))
+
+
+def shard_fleet(tree, mesh: Mesh):
+    """Explicitly place a fleet-batched pytree (stacked NetworkEnv, fleet
+    ScenarioState, batched PlanState) with its leading dim split over the
+    mesh's fleet axis. jit would insert the same transfer implicitly; doing
+    it once up front keeps steady-state dispatch transfer-free (and clean
+    under jax.transfer_guard('disallow'))."""
+    return jax.device_put(tree, fleet_sharding(mesh))
 
 
 def axis_size(mesh: Mesh, name) -> int:

@@ -132,12 +132,19 @@ class OnlineSplitServer:
     happens when the planned split layer actually moves. `observe(env)`
     returns the current SplitPrograms.
 
+    The epoch loop is device-resident: the engine's replan dispatches
+    asynchronously (rho gate and warm payload are traced into the compiled
+    program), GD-iteration accounting accumulates in a device scalar (read
+    it lazily via the `total_iters` property), and the only host sync per
+    replan is fetching the planned split layer s* -- the serve decision that
+    chooses whether to re-cut the model is inherently a host branch.
+
     model/params may be None for planning-only runs (benchmarks, tests):
     the re-cut is then recorded but no programs are built.
 
     The PlanState threaded across epochs carries the full warm-start payload
     (normalized optima, Adam moments + step counts, and the epoch's gains for
-    the engine's rho-adaptive selector). A network shape change (user count /
+    the engine's rho-adaptive gate). A network shape change (user count /
     subchannel count) invalidates that state: observe() catches the engine's
     shape-change ValueError, resets the warm state, and re-plans cold --
     `cold_resets` counts these events.
@@ -157,7 +164,13 @@ class OnlineSplitServer:
         self.epoch = 0
         self.recuts = 0
         self.cold_resets = 0
-        self.total_iters = 0
+        self._iters_acc = jnp.zeros((), jnp.int32)  # device-side accumulator
+
+    @property
+    def total_iters(self) -> int:
+        """Total GD iterations across all re-plans. Reading it syncs the
+        device accumulator; the serving loop itself never does."""
+        return int(self._iters_acc)
 
     def observe(self, env) -> SplitPrograms | None:
         """Advance one epoch: re-plan on schedule, re-cut if s* moved."""
@@ -172,8 +185,8 @@ class OnlineSplitServer:
                 self.state = None
                 self.cold_resets += 1
                 self.state = self.engine.plan(env)
-            self.total_iters += int(self.state.total_iters)
-            s = int(self.state.plan.s)
+            self._iters_acc = self._iters_acc + self.state.total_iters
+            s = int(self.state.plan.s)  # the one host sync: re-cut decision
             if s != self.split_layer:
                 self.split_layer = s
                 self.recuts += 1

@@ -7,10 +7,15 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.pshard import (  # noqa: F401
+    FLEET_AXIS,
     RULES,
     ambient_mesh,
     axis_size,
     constrain,
+    fleet_axis,
+    fleet_mesh,
+    fleet_sharding,
+    shard_fleet,
     spec_for,
 )
 

@@ -12,15 +12,19 @@ NetworkEnv hits the same compiled solver:
 `episode` rolls a whole correlated sequence. Epoch 0's env is distributed
 exactly like core.channel.make_env (uniform positions, Exp(1) fading).
 
-`init_many`/`step_many`/`env_many` are the vmapped fleet variants: B
-independent realizations of the same ScenarioConfig evolving in parallel
+`init_many`/`step_many`/`env_many` are the jitted + vmapped fleet variants:
+B independent realizations of the same ScenarioConfig evolving in parallel
 (leaves lead with B), feeding PlannerEngine.plan_many/replan_many with one
 compiled program. step_many optionally takes a per-member fading rho, so a
-single fleet can sweep correlation levels.
+single fleet can sweep correlation levels. Because every fleet op is a
+compiled program over device-resident state, the whole online epoch loop
+(step_many -> env_many -> replan_many -> serve decision) enqueues
+asynchronously without leaving the device.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator, NamedTuple
 
 import jax
@@ -77,7 +81,14 @@ class ScenarioState(NamedTuple):
 
 class Scenario:
     def __init__(self, cfg: ScenarioConfig):
-        self.cfg = cfg
+        self._cfg = cfg
+
+    @property
+    def cfg(self) -> ScenarioConfig:
+        """Read-only: the jitted fleet ops close over the config (and its
+        Jakes rho) at first use, so mutating it afterwards would be silently
+        ignored -- build a new Scenario for new parameters."""
+        return self._cfg
 
     # -- state ------------------------------------------------------------
     def init(self, key: jax.Array) -> ScenarioState:
@@ -133,11 +144,34 @@ class Scenario:
         return NetworkEnv(g_up=g_up, g_dn=g_dn, ap=ap, radio=cfg.radio,
                           comp=cfg.comp)
 
-    # -- vmapped fleet API -------------------------------------------------
+    # -- jitted fleet API --------------------------------------------------
+    # Each fleet op is jit(vmap(...)) built once per Scenario (jit's own
+    # cache then keys on the fleet size), so an online epoch loop dispatches
+    # compiled programs over device-resident state instead of re-tracing
+    # vmaps -- nothing syncs to host between step, env, and replan.
+    @functools.cached_property
+    def _init_many(self):
+        return jax.jit(jax.vmap(self.init))
+
+    @functools.cached_property
+    def _step_many(self):
+        # The config's Jakes-derived rho is host math (float()) -- hoist it
+        # out of the trace and close over it as a constant.
+        rho = self.cfg.rho
+        return jax.jit(jax.vmap(lambda k, s: self.step(k, s, rho)))
+
+    @functools.cached_property
+    def _step_many_rho(self):
+        return jax.jit(jax.vmap(self.step, in_axes=(0, 0, 0)))
+
+    @functools.cached_property
+    def _env_many(self):
+        return jax.jit(jax.vmap(self.env))
+
     def init_many(self, keys: jax.Array) -> ScenarioState:
         """Initialize B independent realizations; keys: (B, 2) from
         jax.random.split. Returned leaves lead with B."""
-        return jax.vmap(self.init)(keys)
+        return self._init_many(keys)
 
     def step_many(self, keys: jax.Array, states: ScenarioState,
                   rho: Array | None = None) -> ScenarioState:
@@ -145,14 +179,14 @@ class Scenario:
         fading correlation override (sweep rho across the fleet in one
         compiled program)."""
         if rho is None:
-            return jax.vmap(self.step)(keys, states)
-        return jax.vmap(self.step)(keys, states, jnp.asarray(rho))
+            return self._step_many(keys, states)
+        return self._step_many_rho(keys, states, jnp.asarray(rho))
 
     def env_many(self, states: ScenarioState) -> NetworkEnv:
         """Materialize the stacked NetworkEnv of the fleet (leaves lead with
         B; constant radio/comp scalars are broadcast), ready for
         PlannerEngine.plan_many/replan_many."""
-        return jax.vmap(self.env)(states)
+        return self._env_many(states)
 
     def episode(self, key: jax.Array, n_epochs: int) -> Iterator[NetworkEnv]:
         """Yield n_epochs correlated NetworkEnv realizations."""

@@ -1,5 +1,8 @@
-"""Shared fixtures. NOTE: device count must stay 1 here (the 512-device
-XLA_FLAGS override belongs ONLY to launch/dryrun.py)."""
+"""Shared fixtures. NOTE: CI runs this suite with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the shard_map fleet
+tests (test_fleet_sharding.py) exercise a real multi-device mesh; they skip
+at lower device counts. The 512-device override still belongs ONLY to the
+launch/dryrun.py subprocess (which sets its own XLA_FLAGS)."""
 import jax
 import pytest
 

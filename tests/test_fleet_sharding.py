@@ -1,0 +1,159 @@
+"""Mesh-sharded fleet planning == the vmapped path, per fleet member.
+
+These tests need >= 8 local devices; CI forces them with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (see .github/workflows).
+Without the flag they skip -- the vmap-path equivalents in
+test_planning_engine.py still run everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GdConfig, make_env, make_weights, profiles
+from repro.planning import PlannerEngine
+from repro.pshard import fleet_axis, fleet_mesh, shard_fleet
+from repro.scenarios import Scenario, ScenarioConfig
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+FLEET = 8
+ADAM_CFG = GdConfig(step_size=1e-2, eps=1e-4, max_iters=80, optimizer="adam")
+# warm_rho_min=0.9: with static positions the path-loss structure keeps the
+# gain correlation ~0.6-0.85 even for fully uncorrelated fading, while
+# rho=0.999 fading estimates ~0.999 -- so half the fleet below lands on each
+# side of the gate.
+SCFG = ScenarioConfig(n_users=6, n_aps=2, n_sub=3, speed_mps=0.0,
+                      arrival_rate_hz=0.0)
+
+
+@pytest.fixture(scope="module")
+def engines():
+    w = make_weights(SCFG.n_users)
+    vm = PlannerEngine(profiles.nin(), weights=w, cfg=ADAM_CFG,
+                       warm_rho_min=0.9)
+    return vm, vm.shard(fleet_mesh())
+
+
+@pytest.fixture(scope="module")
+def fleet_rollout(engines):
+    """Two epochs of an 8-member fleet, planned on both paths. The second
+    epoch's per-member fading rho splits the fleet across the warm gate:
+    members 0-3 stay correlated (0.999), members 4-7 redraw (0.0)."""
+    vm, sh = engines
+    sc = Scenario(SCFG)
+    states = sc.init_many(jax.random.split(jax.random.PRNGKey(0), FLEET))
+    envs0 = sc.env_many(states)
+    plan_vm = vm.plan_many(envs0)
+    plan_sh = sh.plan_many(shard_fleet(envs0, sh.mesh))
+    rho = jnp.array([0.999] * 4 + [0.0] * 4)
+    states = sc.step_many(jax.random.split(jax.random.PRNGKey(1), FLEET),
+                          states, rho=rho)
+    envs1 = sc.env_many(states)
+    warm_vm = vm.replan_many(plan_vm, envs1)
+    warm_sh = sh.replan_many(plan_sh, shard_fleet(envs1, sh.mesh))
+    return plan_vm, plan_sh, warm_vm, warm_sh
+
+
+def _assert_members_match(a, b):
+    """Per-member agreement between two batched PlanStates: same split,
+    utility within tolerance, iteration counts within the couple-of-iters
+    slack that different reduction orders can nudge a stopping rule by.
+    Reads only the plan outputs: the sharded path *donates* the carried
+    warm payload (norms/moms/steps), so those buffers are dead after the
+    fixture's replan -- which is itself evidence the donation works."""
+    for i in range(FLEET):
+        assert int(a.plan.s[i]) == int(b.plan.s[i]), i
+        assert float(a.plan.utility[i]) == pytest.approx(
+            float(b.plan.utility[i]), abs=1e-4), i
+        assert abs(int(a.total_iters[i]) - int(b.total_iters[i])) <= 2, i
+
+
+def test_mesh_is_fleet_axis():
+    mesh = fleet_mesh()
+    assert fleet_axis(mesh) == "fleet"
+    assert mesh.shape["fleet"] == jax.device_count()
+
+
+def test_plan_many_sharded_matches_vmap(fleet_rollout):
+    plan_vm, plan_sh, _, _ = fleet_rollout
+    _assert_members_match(plan_vm, plan_sh)
+
+
+def test_replan_many_sharded_matches_vmap(fleet_rollout):
+    _, _, warm_vm, warm_sh = fleet_rollout
+    _assert_members_match(warm_vm, warm_sh)
+
+
+def test_warm_gate_per_member_and_agrees(fleet_rollout):
+    """The in-jit rho estimate must agree across paths AND actually split
+    the fleet: correlated members pass the gate, redrawn members fall below
+    warm_rho_min and run the cold chain."""
+    _, _, warm_vm, warm_sh = fleet_rollout
+    rho_vm = jnp.asarray(warm_vm.warm_rho)
+    rho_sh = jnp.asarray(warm_sh.warm_rho)
+    assert rho_vm.shape == (FLEET,)
+    assert jnp.max(jnp.abs(rho_vm - rho_sh)) < 1e-5
+    gate = rho_vm >= 0.9
+    assert bool(jnp.all(gate[:4])), rho_vm       # correlated: warm
+    # Redrawn fading usually lands below the threshold, but a member whose
+    # path-loss spread dominates its gains can legitimately stay above it;
+    # what the test needs is both gate branches live in one fleet program.
+    assert not bool(jnp.all(gate[4:])), rho_vm   # some member runs cold
+
+
+def test_sharded_replan_dispatch_is_transfer_free(engines):
+    """Steady-state sharded replan must enqueue with zero implicit
+    transfers: state, envs, and engine constants already live on the mesh,
+    and the warm gate is traced into the program (acceptance criterion:
+    no host-side numpy in the dispatch path)."""
+    _, sh = engines
+    sc = Scenario(SCFG)
+    states = sc.init_many(jax.random.split(jax.random.PRNGKey(7), FLEET))
+    state = sh.plan_many(shard_fleet(sc.env_many(states), sh.mesh))
+    states = sc.step_many(jax.random.split(jax.random.PRNGKey(8), FLEET),
+                          states)
+    envs = shard_fleet(sc.env_many(states), sh.mesh)
+    state = sh.replan_many(state, envs)     # compile the warm program
+    states = sc.step_many(jax.random.split(jax.random.PRNGKey(9), FLEET),
+                          states)
+    envs = shard_fleet(sc.env_many(states), sh.mesh)
+    jax.block_until_ready((state, envs))
+    w = make_weights(SCFG.n_users)   # per-call weights, made off-mesh
+    jax.block_until_ready(w)
+    with jax.transfer_guard("disallow"):
+        # engine-held weights AND caller-passed weights must both dispatch
+        # transfer-free (the latter are replicated explicitly per call)
+        nxt = sh.replan_many(state, envs, weights=w)
+    jax.block_until_ready(nxt)
+    assert nxt.plan.s.shape == (FLEET,)
+
+
+def test_mesh_is_read_only(engines):
+    """The compiled fleet programs and replicated constants are lowered per
+    mesh; swapping meshes must go through shard(), not attribute mutation."""
+    _, sh = engines
+    with pytest.raises(AttributeError):
+        sh.mesh = None
+    assert sh.shard(None).mesh is None
+
+
+def test_mesh_engine_single_scenario_still_works(engines):
+    """A mesh-attached engine must still serve single-scenario plan/replan:
+    the mesh-replicated constants belong only to the sharded fleet programs,
+    and an env committed to one device must not collide with them."""
+    _, sh = engines
+    env = jax.device_put(
+        make_env(jax.random.PRNGKey(5), SCFG.n_users, SCFG.n_aps, SCFG.n_sub),
+        jax.devices()[0])
+    state = sh.replan(sh.plan(env), env)
+    assert float(state.warm_rho) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_fleet_not_divisible_raises(engines):
+    _, sh = engines
+    sc = Scenario(SCFG)
+    states = sc.init_many(jax.random.split(jax.random.PRNGKey(3), FLEET - 2))
+    with pytest.raises(ValueError, match="divisible"):
+        sh.plan_many(sc.env_many(states))

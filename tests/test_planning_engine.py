@@ -230,6 +230,74 @@ def test_replan_many_none_and_shape_checks():
         eng.replan_many(state, [])
 
 
+def test_shape_guard_batched_vs_single_states(small_env):
+    """The guards must read the network shape off the right trailing dims
+    for both state layouts: a fleet state handed to replan() (and a single
+    state handed to replan_many()) is told exactly what to use instead --
+    not given a garbled (U, M) mismatch from misread leading dims."""
+    from repro.planning import WarmStateShapeError
+
+    eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+    envs = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4) for s in range(2)])
+    fleet_state = eng.plan_many(envs)
+    single_state = eng.plan(small_env)
+    with pytest.raises(WarmStateShapeError, match="replan_many"):
+        eng.replan(fleet_state, small_env)
+    with pytest.raises(WarmStateShapeError, match="plan_many|replan\\(\\)"):
+        eng.replan_many(single_state, envs)
+    # fleet size mismatch: 2-member state vs 3-member envs
+    envs3 = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4)
+                        for s in (5, 6, 7)])
+    with pytest.raises(WarmStateShapeError, match="fleet of 2"):
+        eng.replan_many(fleet_state, envs3)
+    # single-scenario (U, M) mismatch keeps its message
+    with pytest.raises(WarmStateShapeError, match="users"):
+        eng.replan(single_state, make_env(jax.random.PRNGKey(3), 6, 2, 4))
+    # an unbatched env is told to use replan()/plan(), not misread
+    with pytest.raises(WarmStateShapeError, match="use replan\\(\\)"):
+        eng.replan_many(fleet_state, small_env)
+    with pytest.raises(ValueError, match="use plan\\(\\)"):
+        eng.plan_many(small_env)
+
+
+@pytest.fixture(scope="module")
+def adam_engine(weights):
+    return PlannerEngine(profiles.nin(), weights=weights, cfg=ADAM_CFG)
+
+
+def test_replan_exposes_in_jit_rho_estimate(small_env, adam_engine):
+    """PlanState.warm_rho is the gate's traced correlation estimate: None
+    from a cold plan, ~1 when the env repeats, and low for a fresh draw."""
+    eng = adam_engine
+    fresh = eng.plan(small_env)
+    assert fresh.warm_rho is None
+    warm = eng.replan(fresh, small_env)
+    assert float(warm.warm_rho) == pytest.approx(1.0, abs=1e-5)
+    other = eng.replan(fresh, make_env(jax.random.PRNGKey(11), 8, 2, 4))
+    assert 0.0 <= float(other.warm_rho) < 1.0
+
+
+def test_replan_dispatch_no_host_transfer(small_env, adam_engine):
+    """Acceptance: replan and replan_many enqueue with zero host-side numpy
+    -- the rho gate, moment decay, and warm payload are all device ops, so
+    dispatch survives jax.transfer_guard('disallow') once compiled."""
+    eng = adam_engine
+    # make_env leaves the radio/comp constants as python floats; a device-
+    # resident pipeline (Scenario.env_many is jitted) has them on device
+    # already, so place them once before the guarded dispatch.
+    env2 = jax.device_put(make_env(jax.random.PRNGKey(21), 8, 2, 4))
+    state = eng.replan(eng.plan(small_env), jax.device_put(small_env))
+    envs = stack_envs([small_env, env2])
+    fleet = eng.replan_many(eng.plan_many(envs), envs)
+    jax.block_until_ready((state, fleet))
+    with jax.transfer_guard("disallow"):
+        state2 = eng.replan(state, env2)
+        fleet2 = eng.replan_many(fleet, envs)
+    jax.block_until_ready((state2, fleet2))
+    assert float(state2.warm_rho) >= 0.0
+    assert fleet2.warm_rho.shape == (2,)
+
+
 def test_replan_rho_threshold_one_equals_cold(small_env):
     """warm_rho_min=1.0: the correlation estimate is (almost surely) below
     threshold, so replan runs the exact cold Li-GD chain -- same split, same
@@ -245,6 +313,27 @@ def test_replan_rho_threshold_one_equals_cold(small_env):
     assert int(warm.plan.s) == int(ref.plan.s)
     assert float(warm.plan.utility) == pytest.approx(float(ref.plan.utility),
                                                      abs=1e-6)
+
+
+def test_gate_retune_recompiles(small_env):
+    """warm_rho_min is a trace-time constant of the compiled replan program,
+    so retuning it on a live engine must compile a fresh program (cache key)
+    and actually change the gate -- not silently keep the old threshold."""
+    w = make_weights(small_env.n_users)
+    eng = PlannerEngine(profiles.nin(), weights=w, cfg=ADAM_CFG,
+                        warm_rho_min=0.0)
+    first = eng.plan(small_env)
+    env2 = make_env(jax.random.PRNGKey(42), 8, 2, 4)  # uncorrelated draw
+    eng.replan(first, env2)                           # gate open at 0.0
+    n = eng.cache_size()
+    eng.warm_rho_min = 1.0
+    gated = eng.replan(first, env2)
+    assert eng.cache_size() == n + 1
+    # threshold 1.0 now gates the stale start off: exact cold Li-GD chain
+    ref = eng.plan(env2)
+    assert int(gated.total_iters) == int(ref.total_iters)
+    assert float(gated.plan.utility) == pytest.approx(
+        float(ref.plan.utility), abs=1e-6)
 
 
 def test_engine_rejects_unknown_method():

@@ -110,3 +110,12 @@ def test_presets_generate_valid_episodes():
         assert env.g_up.shape == (cfg.n_users, cfg.n_aps, cfg.n_sub)
     with pytest.raises(KeyError):
         presets.get("metaverse")
+
+
+def test_scenario_cfg_read_only():
+    """The jitted fleet ops close over the config at first use; mutating it
+    afterwards would be silently ignored, so the attribute refuses writes."""
+    sc = Scenario(_static_cfg())
+    with pytest.raises(AttributeError):
+        sc.cfg = _static_cfg(n_users=5)
+    assert sc.cfg.n_users == 8
