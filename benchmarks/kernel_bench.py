@@ -1,7 +1,19 @@
 """Kernel microbenchmarks: interpret-mode correctness timing is meaningless
 for TPU perf, so we report (a) oracle wall-time on CPU as a sanity number
-and (b) the analytic VMEM working set + arithmetic intensity per kernel
-block, which is what the TPU schedule is designed around."""
+and (b) the analytic VMEM working set + HBM traffic per kernel block, which
+is what the TPU schedule is designed around.
+
+The gradient section covers the paper-scale GD hot loop (U in {256, 625,
+1250}, M=250): one value_and_grad step of the summed user rates, einsum vs
+the custom_vjp Pallas kernel. The einsum backward materializes pairwise
+(U, V, M) temporaries; the kernel path streams them block-by-block in both
+directions, so its analytic peak is the HBM-resident g_vu input alone.
+Measured CPU times are emitted where feasible (einsum at U=64 and -- full
+mode only -- U=256 with M=250; interpret-mode kernel only at the U=64
+smoke size); the three paper-scale rows are analytic. --quick trims to
+the smoke size for CI.
+"""
+import argparse
 import time
 
 import jax
@@ -9,19 +21,94 @@ import jax.numpy as jnp
 
 from repro.core import channel, make_env
 from repro.kernels import ops, ref
+from repro.kernels.noma_rates import vmem_block_bytes
 from benchmarks.paper_common import emit
+
+# VPU-aligned tiles of the deployed schedule (DESIGN.md Sec. 4).
+BU = BV = 8
+BM = 128
 
 
 def _time(f, *args, n=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))          # warm up once, block on all outputs
     t0 = time.time()
     for _ in range(n):
         jax.block_until_ready(f(*args))
     return (time.time() - t0) / n * 1e6
 
 
-def run():
+def _grad_step(env, backend, blocks=None):
+    """jitted value_and_grad of the summed rates -- one GD hot-loop step."""
+    if blocks is None:
+        def loss(beta, p_up, p_dn):
+            r_up = channel.uplink_rates(env, beta, p_up, backend=backend)
+            r_dn = channel.downlink_rates(env, beta, p_dn, backend=backend)
+            return jnp.sum(r_up) + jnp.sum(r_dn)
+    else:
+        # Same loss as the einsum branch, assembled by the kernel-backed
+        # rate wrappers so the two rows time gradients of one function.
+        bu, bv, bm = blocks
+
+        def loss(beta, p_up, p_dn):
+            r_up = ops.noma_uplink_rates(env, beta, p_up, interpret=True,
+                                         block_u=bu, block_v=bv, block_m=bm)
+            r_dn = ops.noma_downlink_rates(env, beta, p_dn, interpret=True,
+                                           block_u=bu, block_v=bv, block_m=bm)
+            return jnp.sum(r_up) + jnp.sum(r_dn)
+
+    return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
+
+
+def _grad_rows(quick: bool):
+    rows = []
+    m_paper = 250
+    # Analytic peak-memory at paper scale: the einsum grad step builds the
+    # pairwise mask, its masked product, and the transposed backward product
+    # as full (U, V, M) fp32 temporaries (one uplink + one downlink set);
+    # the kernel path's pairwise-sized buffers are the HBM-resident g_vu
+    # gather plus its block-padded copy (paper dims are not block multiples;
+    # XLA may fuse gather+pad into one buffer, so 2x is the conservative
+    # bound) -- streamed through VMEM in both directions, never a pairwise
+    # compute temporary.
+    for u in (256, 625, 1250):
+        uvm = float(u) * u * m_paper * 4
+        up = -(-u // BU) * BU
+        uvm_pad = float(-(-u // BV) * BV) * up * (-(-m_paper // BM) * BM) * 4
+        rows.append((f"noma_grad:einsum_peak_bytes:u{u}", 3 * uvm,
+                     "(U,V,M) fp32 mask+product+bwd temporaries per link"))
+        rows.append((f"noma_grad:kernel_peak_bytes:u{u}", uvm + uvm_pad,
+                     "g_vu gather + block-padded kernel copy; no pairwise "
+                     "compute temporary"))
+    fwd = vmem_block_bytes(BU, BV, BM, "fwd")
+    bwd = vmem_block_bytes(BU, BV, BM, "bwd")
+    rows.append(("noma_grad:fwd_vmem_block_bytes", float(fwd),
+                 f"(BU,BV,BM)=({BU},{BV},{BM}) inputs+scratch+out, fp32"))
+    rows.append(("noma_grad:bwd_vmem_block_bytes", float(bwd),
+                 f"backward block <= forward budget: {bwd} <= {fwd}"))
+    assert bwd <= fwd, (bwd, fwd)
+
+    # Measured grad-step wall time. The einsum step is real CPU XLA; the
+    # kernel step runs the Pallas bodies in interpret mode, so it is a
+    # correctness/dispatch sanity number, not a perf claim.
+    meas = [(64, 4, 64)] if quick else [(64, 4, 64), (256, 8, 250)]
+    for u, n_aps, m in meas:
+        env = make_env(jax.random.PRNGKey(5), u, n_aps, m)
+        beta = jnp.ones((u, m)) / m
+        p_up = jnp.full((u,), 0.2)
+        p_dn = jnp.full((u,), 1.0)
+        reps = 1 if u >= 256 else 2
+        us_e = _time(_grad_step(env, "einsum"), beta, p_up, p_dn, n=reps)
+        rows.append((f"noma_grad:einsum_step_us:u{u}_m{m}", us_e,
+                     "CPU XLA value_and_grad, both links"))
+        if u <= 64:
+            us_k = _time(_grad_step(env, None, blocks=(32, 32, 128)),
+                         beta, p_up, p_dn, n=reps)
+            rows.append((f"noma_grad:kernel_step_us:u{u}_m{m}", us_k,
+                         "CPU interpret custom_vjp (sanity, not perf)"))
+    return rows
+
+
+def run(quick: bool = False):
     rows = []
     # flash attention: block VMEM working set
     bq = bk = 128
@@ -60,8 +147,13 @@ def run():
     rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
                  1250 * 1250 * 250 * 4 / 1e9,
                  "naive (U,V,M) fp32 the kernel avoids materializing"))
+
+    rows.extend(_grad_rows(quick))
     emit("kernel_bench", rows)
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-size measured rows only (CI)")
+    run(quick=ap.parse_args().quick)

@@ -37,7 +37,14 @@ def mean_outcomes(n_users, n_aps, n_sub, prof, w_T=W_T, seeds=N_SEEDS,
     return acc
 
 
+# Every emit() call also appends machine-readable rows here so the harness
+# (benchmarks/run.py) can write the BENCH_<n>.json perf-trajectory artifact.
+ROWS: list[dict] = []
+
+
 def emit(name: str, rows: list[tuple]):
     """CSV rows: (label, value, derived-annotation)."""
     for label, val, derived in rows:
         print(f"{name},{label},{val:.6g},{derived}")
+        ROWS.append({"bench": name, "label": label, "value": float(val),
+                     "derived": derived})

@@ -22,11 +22,13 @@ from repro.core.types import Array, ComputeConstants, NetworkEnv, RadioConstants
 
 LOG2 = 0.6931471805599453
 
-# SINR backend: 'einsum' is the differentiable XLA reference (used inside the
-# GD solver); 'pallas' routes the pairwise-interference reductions through the
-# tiled kernel in repro.kernels.noma_rates (large-U evaluation path), falling
-# back to interpret mode off-TPU; 'pallas_interpret' forces interpret mode.
-_SINR_BACKENDS = ("einsum", "pallas", "pallas_interpret")
+# SINR backend: 'einsum' is the XLA reference; 'pallas' routes the pairwise
+# interference reductions through the tiled kernel in repro.kernels.noma_rates
+# (custom_vjp: forward AND backward stream (BU, BV, BM) blocks, so the GD
+# gradient path runs tiled at paper scale), falling back to interpret mode
+# off-TPU; 'pallas_interpret' forces interpret mode. Both backends produce
+# identical gradients to 1e-5 (tests/test_grad_kernels.py).
+SINR_BACKENDS = ("einsum", "pallas", "pallas_interpret")
 _SINR_BACKEND = "einsum"
 
 
@@ -37,8 +39,8 @@ def set_sinr_backend(backend: str) -> str:
     backend they were traced with (no retrace on switch). Inside long-lived
     jitted code, pass backend= explicitly instead of relying on the global."""
     global _SINR_BACKEND
-    if backend not in _SINR_BACKENDS:
-        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
+    if backend not in SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {SINR_BACKENDS}, got {backend!r}")
     prev, _SINR_BACKEND = _SINR_BACKEND, backend
     return prev
 
@@ -82,12 +84,17 @@ def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array,
                 backend: str | None = None) -> Array:
     """Paper eq. (5). Returns SINR (U, M)."""
     backend = _SINR_BACKEND if backend is None else backend
-    if backend not in _SINR_BACKENDS:
-        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
+    if backend not in SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {SINR_BACKENDS}, got {backend!r}")
     own = env.own_gain_up()                      # (U, M) gain to own AP
     tx = beta_up * p_up[:, None]                  # (U, M) effective tx power
     if backend != "einsum":
         from repro.kernels import ops
+        # The kernel's custom_vjp treats the channel gains as constants
+        # (zero env cotangents); detach the outside-kernel own-gain uses too
+        # so the pallas env-gradient is coherently zero rather than a silent
+        # mixture. Differentiating w.r.t. gains requires backend="einsum".
+        own = jax.lax.stop_gradient(own)
         intra, inter = ops.noma_pairwise_up(env, tx,
                                             interpret=_pallas_interpret(backend))
     else:
@@ -117,12 +124,14 @@ def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array,
                   backend: str | None = None) -> Array:
     """Paper eq. (8). Returns SINR (U, M)."""
     backend = _SINR_BACKEND if backend is None else backend
-    if backend not in _SINR_BACKENDS:
-        raise ValueError(f"backend must be one of {_SINR_BACKENDS}, got {backend!r}")
+    if backend not in SINR_BACKENDS:
+        raise ValueError(f"backend must be one of {SINR_BACKENDS}, got {backend!r}")
     own = env.own_gain_dn()                       # (U, M) gain my AP -> me
     tx = beta_dn * p_dn[:, None]                  # (U, M) power my AP spends on me
     if backend != "einsum":
         from repro.kernels import ops
+        # See uplink_sinr: gains are constants under the kernel backend.
+        own = jax.lax.stop_gradient(own)
         intra, inter = ops.noma_pairwise_dn(env, tx,
                                             interpret=_pallas_interpret(backend))
         intra = intra * own
@@ -152,14 +161,18 @@ def downlink_rates(env: NetworkEnv, beta_dn: Array, p_dn: Array,
 
 def user_rates(
     env: NetworkEnv, beta_up: Array, beta_dn: Array, p_up: Array, p_dn: Array,
-    backend: str = "einsum",
+    backend: str | None = None,
 ) -> tuple[Array, Array]:
     """Total uplink/downlink rate per user (bit/s), floored for stability.
 
-    backend is pinned to 'einsum' (not the global default): this is the GD
-    gradient path (utility -> user_rates) and jax.grad cannot differentiate
-    through the Pallas kernel. Pass backend explicitly to route pure
-    evaluation through the tiled kernel."""
+    Differentiable in (beta, p) under every backend: the Pallas path
+    carries a custom_vjp whose backward kernel re-streams interferer blocks
+    (see kernels/noma_rates.py), so the GD gradient path (utility ->
+    user_rates) may run tiled at paper scale. Gradients w.r.t. the channel
+    gains exist only under "einsum" -- the kernel backend stop_gradients
+    the env (coherently zero, never a partial mixture). None resolves the
+    module default at trace time; the solver passes GdConfig.sinr_backend
+    explicitly."""
     r_up = jnp.sum(uplink_rates(env, beta_up, p_up, backend=backend), axis=-1)
     r_dn = jnp.sum(downlink_rates(env, beta_dn, p_dn, backend=backend), axis=-1)
     return jnp.maximum(r_up, 1e-9), jnp.maximum(r_dn, 1e-9)

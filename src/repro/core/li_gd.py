@@ -174,7 +174,8 @@ def gd_solve(
     beta_min = env.radio.beta_min
 
     def gamma_fn(norm):
-        return _utility(env, prof, s, to_physical(norm, env), w)
+        return _utility(env, prof, s, to_physical(norm, env), w,
+                        backend=cfg.sinr_backend)
 
     grad_fn = jax.value_and_grad(gamma_fn)
     adam = cfg.optimizer == "adam"
@@ -310,7 +311,8 @@ def gd_loop(
             s, w0, m1, m2, st0 = xs
 
             def gamma_at(n):
-                return _utility(env, prof, s, to_physical(n, env), w)
+                return _utility(env, prof, s, to_physical(n, env), w,
+                                backend=cfg.sinr_backend)
 
             pick_warm = jnp.logical_and(use_warm,
                                         gamma_at(w0) <= gamma_at(carry_norm))
@@ -419,6 +421,7 @@ def greedy_round_dn(env: NetworkEnv, beta: Array, p: Array) -> Array:
 def assemble_plan(
     env: NetworkEnv, loop: LoopResult, prof: ModelProfile,
     rounding: str = "best", w: EccWeights | None = None,
+    backend: str | None = None,
 ) -> SplitPlan:
     s_star = jnp.argmin(loop.gammas).astype(jnp.int32)
     best = jax.tree.map(lambda x: x[s_star], loop.norms)
@@ -441,7 +444,7 @@ def assemble_plan(
                     beta_dn=jax.nn.one_hot(sd, env.n_sub),
                     p_up=v.p_up, p_dn=v.p_dn, r=v.r,
                 )
-                return _utility(env, prof, s_star, vv, w)
+                return _utility(env, prof, s_star, vv, w, backend=backend)
 
             u_argmax = disc_util(sub_up, sub_dn)
             u_greedy = disc_util(g_up, g_dn)
@@ -474,4 +477,5 @@ def solve(
     if method not in ("li_gd", "gd"):
         raise KeyError(method)
     loop = gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
-    return assemble_plan(env, loop, prof, rounding=rounding, w=w)
+    return assemble_plan(env, loop, prof, rounding=rounding, w=w,
+                         backend=cfg.sinr_backend)

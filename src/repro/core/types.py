@@ -173,6 +173,13 @@ class GdConfig:
     # baseline ||g|| < eps, which never fires on the boundary and silently
     # defers to the looser Gamma/maxdiff rules.
     stop_rule: str = static_field(default="pgd")
+    # SINR backend traced into the solver's gradient path ("einsum" |
+    # "pallas" | "pallas_interpret"). The Pallas pairwise kernel carries a
+    # custom_vjp, so the GD hot loop itself can run stream-tiled at paper
+    # scale; "pallas" falls back to interpret mode off-TPU. Always passed
+    # explicitly to utility (never the channel-module global), so compiled
+    # solver programs are keyed on -- and immune to -- backend switches.
+    sinr_backend: str = static_field(default="einsum")
 
 
 @_register

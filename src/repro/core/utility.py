@@ -34,12 +34,15 @@ def delay_energy(
     s: Array,
     v: GdVars,
     rates: tuple[Array, Array] | None = None,
+    backend: str | None = None,
 ) -> tuple[Array, Array]:
-    """Per-user (T_i, E_i): paper eqs. (12) and (17)."""
+    """Per-user (T_i, E_i): paper eqs. (12) and (17). backend selects the
+    SINR path (channel.user_rates); every choice is differentiable."""
     comp = env.comp
     f_dev, f_edge, w_up, m_dn = split_constants(prof, s)
     if rates is None:
-        r_up, r_dn = channel.user_rates(env, v.beta_up, v.beta_dn, v.p_up, v.p_dn)
+        r_up, r_dn = channel.user_rates(env, v.beta_up, v.beta_dn, v.p_up,
+                                        v.p_dn, backend=backend)
     else:
         r_up, r_dn = rates
     speed_edge = lam(v.r, comp) * comp.c_min_edge
@@ -64,14 +67,16 @@ def utility(
     s: Array,
     v: GdVars,
     w: EccWeights,
+    backend: str | None = None,
 ) -> Array:
     """Gamma_s = sum_i omega_T^i T_i + omega_E^i E_i  (paper eq. 22)."""
-    T, E = delay_energy(env, prof, s, v)
+    T, E = delay_energy(env, prof, s, v, backend=backend)
     return jnp.sum(w.w_T * T + w.w_E * E)
 
 
 def per_user_utility(
-    env: NetworkEnv, prof: ModelProfile, s: Array, v: GdVars, w: EccWeights
+    env: NetworkEnv, prof: ModelProfile, s: Array, v: GdVars, w: EccWeights,
+    backend: str | None = None,
 ) -> Array:
-    T, E = delay_energy(env, prof, s, v)
+    T, E = delay_energy(env, prof, s, v, backend=backend)
     return w.w_T * T + w.w_E * E

@@ -65,6 +65,55 @@ def _kernel(own_u_ref, own_v_ref, w_intra_ref, w_power_ref, g_vu_ref,
         inter_ref[...] = acc_x_ref[...]
 
 
+def _bwd_kernel(own_u_ref, own_v_ref, g_vu_ref, same_vu_ref, di_ref, dx_ref,
+                d_wi_ref, d_wp_ref, acc_i_ref, acc_x_ref, *,
+                descending: bool):
+    """Backward pass: accumulate cotangents w.r.t. the interferer weights.
+
+    Transposed tiling of the forward kernel: (V, M) output blocks live in
+    VMEM and *receiver* blocks U stream as the innermost sequential grid
+    dimension. The masks are recomputed per block (they are cheap VPU work
+    and saving them would cost a (U, V, M) residual -- the tensor this
+    kernel exists to avoid):
+
+      d_wi[v,m] = sum_u same[u,v] * cmp(own_v[v,m], own_u[u,m]) * di[u,m]
+      d_wp[v,m] = sum_u !same[u,v] * g_vu[v,u,m] * dx[u,m]
+
+    Padded receiver rows need no explicit mask: their incoming cotangents
+    di/dx are zero (the caller zero-pads them), so they cannot contribute.
+    Padded interferer rows produce garbage that the caller slices off."""
+    ui = pl.program_id(2)
+    nu = pl.num_programs(2)
+
+    @pl.when(ui == 0)
+    def _init():
+        acc_i_ref[...] = jnp.zeros_like(acc_i_ref)
+        acc_x_ref[...] = jnp.zeros_like(acc_x_ref)
+
+    own_u = own_u_ref[...]           # (BU, BM)
+    own_v = own_v_ref[...]           # (BV, BM)
+    g = g_vu_ref[...]                # (BV, BU, BM)
+    same = same_vu_ref[...]          # (BV, BU)
+    di = di_ref[...]                 # (BU, BM)
+    dx = dx_ref[...]                 # (BU, BM)
+
+    if descending:
+        cmp = own_v[:, None, :] < own_u[None, :, :]   # (BV, BU, BM)
+    else:
+        cmp = own_v[:, None, :] > own_u[None, :, :]
+    sc = same[:, :, None]
+    contrib = jnp.where(cmp & (sc > 0.5), di[None, :, :], 0.0)
+    acc_i_ref[...] += jnp.sum(contrib, axis=1)
+
+    xterm = (1.0 - same)[:, :, None] * g * dx[None, :, :]
+    acc_x_ref[...] += jnp.sum(xterm, axis=1)
+
+    @pl.when(ui == nu - 1)
+    def _finish():
+        d_wi_ref[...] = acc_i_ref[...]
+        d_wp_ref[...] = acc_x_ref[...]
+
+
 def noma_pairwise_kernel(
     own_u: jax.Array,    # (U, M) fp32
     own_v: jax.Array,    # (V, M)  V may exceed U (independent padding)
@@ -119,3 +168,83 @@ def noma_pairwise_kernel(
         interpret=interpret,
     )(own_u, own_v, w_intra, w_power, g_vu, same)
     return out[0], out[1]
+
+
+def noma_pairwise_bwd_kernel(
+    own_u: jax.Array,    # (U, M) fp32
+    own_v: jax.Array,    # (V, M)
+    g_vu: jax.Array,     # (V, U, M)  interferer-major
+    same_vu: jax.Array,  # (V, U) fp32 0/1 -- the forward mask TRANSPOSED
+    d_intra: jax.Array,  # (U, M) cotangent of the forward intra output
+    d_inter: jax.Array,  # (U, M) cotangent of the forward inter output
+    descending: bool = True,
+    block_u: int = 8,
+    block_v: int = 8,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """VJP of noma_pairwise_kernel w.r.t. (w_intra, w_power): (V, M) each.
+
+    Same (BU, BV, BM) VMEM block budget as the forward pass, with the grid
+    transposed: (V, M) cotangent tiles accumulate while receiver blocks
+    stream sequentially, so the backward direction never materializes
+    (U, V, M) either. Cotangents w.r.t. own_u/own_v are zero a.e. (the SIC
+    ordering enters through a step function, exactly as in the einsum
+    reference where the comparison is detached by .astype) and are the
+    caller's to emit; d_g_vu is never needed because the channel gains are
+    environment constants in the GD path."""
+    u, m = own_u.shape
+    v = own_v.shape[0]
+    bu, bv, bm = min(block_u, u), min(block_v, v), min(block_m, m)
+    nu, nvb, nm = pl.cdiv(u, bu), pl.cdiv(v, bv), pl.cdiv(m, bm)
+
+    kernel = functools.partial(_bwd_kernel, descending=descending)
+    grid = (nvb, nm, nu)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),       # own_u
+            pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),       # own_v
+            pl.BlockSpec((bv, bu, bm), lambda vi, mi, ui: (vi, ui, mi)),  # g_vu
+            pl.BlockSpec((bv, bu), lambda vi, mi, ui: (vi, ui)),       # same_vu
+            pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),       # d_intra
+            pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),       # d_inter
+        ],
+        out_specs=[
+            pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),
+            pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v, m), jnp.float32),
+            jax.ShapeDtypeStruct((v, m), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bv, bm), jnp.float32),
+            pltpu.VMEM((bv, bm), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(own_u, own_v, g_vu, same_vu, d_intra, d_inter)
+    return out[0], out[1]
+
+
+def vmem_block_bytes(block_u: int = 8, block_v: int = 8, block_m: int = 128,
+                     direction: str = "fwd") -> int:
+    """Analytic fp32 VMEM working set of one kernel block (inputs + scratch +
+    outputs). The dominant term is the streamed (BV, BU, BM) gain block in
+    both directions; bwd - fwd = 8*(block_v - block_u)*block_m bytes, so the
+    backward pass fits the forward budget whenever block_v <= block_u
+    (equal at the deployed square tiles)."""
+    bu, bv, bm = block_u, block_v, block_m
+    if direction == "fwd":
+        # own_u, 2x scratch, 2x out: (BU, BM); own_v, w_intra, w_power: (BV, BM)
+        words = 5 * bu * bm + 3 * bv * bm + bv * bu * bm + bu * bv
+    elif direction == "bwd":
+        # own_u, d_intra, d_inter: (BU, BM); own_v, 2x scratch, 2x out: (BV, BM)
+        words = 3 * bu * bm + 5 * bv * bm + bv * bu * bm + bv * bu
+    else:
+        raise ValueError(f"direction must be 'fwd' or 'bwd', got {direction!r}")
+    return 4 * words

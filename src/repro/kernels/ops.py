@@ -10,9 +10,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.noma_rates import noma_pairwise_kernel
+from repro.kernels.noma_rates import noma_pairwise_bwd_kernel, noma_pairwise_kernel
 from repro.kernels.rg_lru import rg_lru_kernel
 from repro.core.types import NetworkEnv
 
@@ -85,6 +86,115 @@ def _noma_pairwise_padded(own, w_intra, w_power, g_vu, same, descending,
     return intra[:u, :m], inter[:u, :m]
 
 
+def _noma_pairwise_bwd_padded(own, g_vu, same, d_intra, d_inter, descending,
+                              interpret, block_u, block_v, block_m):
+    """Backward twin of _noma_pairwise_padded: pad to block multiples, run
+    the transposed-streaming kernel, slice the (V, M) weight cotangents.
+
+    The incoming cotangents are zero-padded on the receiver axis, which IS
+    the padded-receiver mask (padded u rows cannot contribute to any sum
+    over u); padded interferer rows fall off with the final slice."""
+    u, m = own.shape
+    bm = min(block_m, m)
+    own_u_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
+    own_v_p = _pad_to(_pad_to(own, block_v, 0), bm, 1)
+    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_v, 0), block_u, 1), bm, 2)
+    same_vu_p = _pad_to(_pad_to(jnp.swapaxes(same, 0, 1), block_v, 0),
+                        block_u, 1)
+    di_p = _pad_to(_pad_to(d_intra.astype(jnp.float32), block_u, 0), bm, 1)
+    dx_p = _pad_to(_pad_to(d_inter.astype(jnp.float32), block_u, 0), bm, 1)
+    d_wi, d_wp = noma_pairwise_bwd_kernel(
+        own_u_p, own_v_p, g_p, same_vu_p, di_p, dx_p,
+        descending=descending, block_u=block_u, block_v=block_v, block_m=bm,
+        interpret=interpret,
+    )
+    return d_wi[:u, :m], d_wp[:u, :m]
+
+
+def _zeros_cot(tree):
+    """Zero cotangents matching a primal pytree: float leaves get dense
+    zeros (weak types preserved via zeros_like), integer leaves get the
+    float0 arrays custom_vjp requires for non-differentiable dtypes."""
+    def z(x):
+        if jnp.issubdtype(jax.core.get_aval(x).dtype, jnp.inexact):
+            return jnp.zeros_like(x)
+        return np.zeros(jnp.shape(x), jax.dtypes.float0)
+    return jax.tree.map(z, tree)
+
+
+def _up_inputs(env: NetworkEnv):
+    """The uplink kernel inputs derived from the environment (all constants
+    of the GD path): own-AP gains, the interferer-major gain gather
+    g_up[v, ap[u], m] -> (V, U, M), and the same-cell mask."""
+    own = env.own_gain_up().astype(jnp.float32)
+    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
+    same = env.same_cell().astype(jnp.float32)
+    return own, g_vu, same
+
+
+def _dn_inputs(env: NetworkEnv):
+    """Downlink analogue: gain of interferer v's AP at user u,
+    g_dn[ap[v], u, m] -> (V, U, M)."""
+    own = env.own_gain_dn().astype(jnp.float32)
+    g_vu = env.g_dn[env.ap, :, :].astype(jnp.float32)
+    same = env.same_cell().astype(jnp.float32)
+    return own, g_vu, same
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _pairwise_up(env, tx, interpret, block_u, block_v, block_m):
+    return _pairwise_up_fwd(env, tx, interpret, block_u, block_v, block_m)[0]
+
+
+def _pairwise_up_fwd(env, tx, interpret, block_u, block_v, block_m):
+    own, g_vu, same = _up_inputs(env)
+    tx = tx.astype(jnp.float32)
+    out = _noma_pairwise_padded(own, tx * own, tx, g_vu, same, True,
+                                interpret, block_u, block_v, block_m)
+    # Residuals are exactly the kernel inputs -- no pairwise intermediates
+    # are saved; the backward kernel re-streams the same blocks.
+    return out, (env, own, g_vu, same)
+
+
+def _pairwise_up_bwd(interpret, block_u, block_v, block_m, res, ct):
+    env, own, g_vu, same = res
+    d_wi, d_wp = _noma_pairwise_bwd_padded(own, g_vu, same, ct[0], ct[1],
+                                           True, interpret, block_u, block_v,
+                                           block_m)
+    # Forward fed the kernel w_intra = tx * own and w_power = tx; chain back
+    # to the one differentiable input. env carries only GD-path constants.
+    return _zeros_cot(env), d_wi * own + d_wp
+
+
+_pairwise_up.defvjp(_pairwise_up_fwd, _pairwise_up_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _pairwise_dn(env, tx, interpret, block_u, block_v, block_m):
+    return _pairwise_dn_fwd(env, tx, interpret, block_u, block_v, block_m)[0]
+
+
+def _pairwise_dn_fwd(env, tx, interpret, block_u, block_v, block_m):
+    own, g_vu, same = _dn_inputs(env)
+    tx = tx.astype(jnp.float32)
+    out = _noma_pairwise_padded(own, tx, tx, g_vu, same, False,
+                                interpret, block_u, block_v, block_m)
+    return out, (env, own, g_vu, same)
+
+
+def _pairwise_dn_bwd(interpret, block_u, block_v, block_m, res, ct):
+    env, own, g_vu, same = res
+    d_wi, d_wp = _noma_pairwise_bwd_padded(own, g_vu, same, ct[0], ct[1],
+                                           False, interpret, block_u, block_v,
+                                           block_m)
+    # Downlink feeds tx into both weight slots (the receiver-side own-gain
+    # factor of eq. 8 is applied by the caller, outside the kernel).
+    return _zeros_cot(env), d_wi + d_wp
+
+
+_pairwise_dn.defvjp(_pairwise_dn_fwd, _pairwise_dn_bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_pairwise_up(
     env: NetworkEnv,
@@ -95,14 +205,12 @@ def noma_pairwise_up(
     block_m: int = 128,
 ) -> tuple[jax.Array, jax.Array]:
     """Uplink (intra, inter) interference terms of eq. (5) via the Pallas
-    kernel: the exact denominators consumed by channel.uplink_sinr."""
-    own = env.own_gain_up().astype(jnp.float32)
-    tx = tx.astype(jnp.float32)
-    # gain of interferer v at user u's AP: g_up[v, ap[u], m] -> (V, U, M)
-    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
-    same = env.same_cell().astype(jnp.float32)
-    return _noma_pairwise_padded(own, tx * own, tx, g_vu, same, True,
-                                 interpret, block_u, block_v, block_m)
+    kernel: the exact denominators consumed by channel.uplink_sinr.
+
+    Differentiable in tx (jax.custom_vjp): the backward pass is the
+    transposed-streaming kernel in noma_rates.py, so the GD gradient path
+    never materializes (U, V, M) in either direction."""
+    return _pairwise_up(env, tx, interpret, block_u, block_v, block_m)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
@@ -116,14 +224,9 @@ def noma_pairwise_dn(
 ) -> tuple[jax.Array, jax.Array]:
     """Downlink (intra, inter) terms of eq. (8). The returned intra term is
     sum_v stronger*same * tx[v]; the caller multiplies by own-gain (the
-    receiver-side factor in eq. 8), matching channel.downlink_sinr."""
-    own = env.own_gain_dn().astype(jnp.float32)
-    tx = tx.astype(jnp.float32)
-    # gain of interferer v's AP at user u: g_dn[ap[v], u, m] -> (V, U, M)
-    g_vu = env.g_dn[env.ap, :, :].astype(jnp.float32)
-    same = env.same_cell().astype(jnp.float32)
-    return _noma_pairwise_padded(own, tx, tx, g_vu, same, False,
-                                 interpret, block_u, block_v, block_m)
+    receiver-side factor in eq. 8), matching channel.downlink_sinr.
+    Differentiable in tx via the same custom_vjp discipline as the uplink."""
+    return _pairwise_dn(env, tx, interpret, block_u, block_v, block_m)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
@@ -136,8 +239,12 @@ def noma_uplink_rates(
     block_v: int = 8,
     block_m: int = 128,
 ) -> jax.Array:
-    """Kernel-backed replacement for repro.core.channel.uplink_rates."""
-    own = env.own_gain_up().astype(jnp.float32)
+    """Kernel-backed replacement for repro.core.channel.uplink_rates.
+
+    Like channel.uplink_sinr's pallas branch, the channel gains are
+    detached so the env gradient is coherently zero (the kernel's
+    custom_vjp already returns zero env cotangents)."""
+    own = jax.lax.stop_gradient(env.own_gain_up()).astype(jnp.float32)
     tx = beta_up * p_up[:, None]
     intra, inter = noma_pairwise_up(env, tx, interpret=interpret,
                                     block_u=block_u, block_v=block_v,
@@ -145,6 +252,30 @@ def noma_uplink_rates(
     sinr = p_up[:, None] * own / (intra + inter + env.noise_up)
     bw = env.radio.bandwidth_up_hz / env.n_sub
     return beta_up * bw * jnp.log1p(sinr) / LOG2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
+def noma_downlink_rates(
+    env: NetworkEnv,
+    beta_dn: jax.Array,   # (U, M)
+    p_dn: jax.Array,      # (U,)
+    interpret: bool = False,
+    block_u: int = 8,
+    block_v: int = 8,
+    block_m: int = 128,
+) -> jax.Array:
+    """Kernel-backed replacement for repro.core.channel.downlink_rates:
+    assembles eq. (8)'s SINR from the pairwise terms (the intra term carries
+    the receiver-side own-gain factor) and applies eq. (9). Channel gains
+    are detached, as in noma_uplink_rates."""
+    own = jax.lax.stop_gradient(env.own_gain_dn()).astype(jnp.float32)
+    tx = beta_dn * p_dn[:, None]
+    intra, inter = noma_pairwise_dn(env, tx, interpret=interpret,
+                                    block_u=block_u, block_v=block_v,
+                                    block_m=block_m)
+    sinr = p_dn[:, None] * own / (intra * own + inter + env.noise_dn)
+    bw = env.radio.bandwidth_dn_hz / env.n_sub
+    return beta_dn * bw * jnp.log1p(sinr) / LOG2
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b", "block_s", "block_w"))

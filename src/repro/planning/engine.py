@@ -47,6 +47,7 @@ sweep.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple, Sequence
 
@@ -59,7 +60,7 @@ try:  # jax >= 0.6 promoted shard_map out of experimental
 except ImportError:
     from jax.experimental.shard_map import shard_map as _shard_map_impl
 
-from repro.core import li_gd
+from repro.core import channel, li_gd
 from repro.core.types import (
     Array,
     EccWeights,
@@ -130,7 +131,8 @@ def _strong_typed(tree):
 
 def _solve_state(env, prof, w, cfg, method, rounding) -> PlanState:
     loop = li_gd.gd_loop(env, prof, w, cfg, chain=(method == "li_gd"))
-    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
+    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w,
+                               backend=cfg.sinr_backend)
     return _strong_typed(
         PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
                   moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up))
@@ -150,7 +152,8 @@ def _resolve_state(env, prof, w, warm, warm_mom, warm_steps, prev_gains,
         warm_mom = jax.tree.map(lambda x: warm_moment_decay * x, warm_mom)
     loop = li_gd.gd_loop(env, prof, w, cfg, warm=warm, warm_mom=warm_mom,
                          warm_steps=warm_steps, use_warm=use_warm)
-    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w)
+    plan = li_gd.assemble_plan(env, loop, prof, rounding=rounding, w=w,
+                               backend=cfg.sinr_backend)
     return _strong_typed(
         PlanState(plan=plan, norms=loop.norms, total_iters=loop.total_iters,
                   moms=loop.moms, opt_steps=loop.opt_steps, gains=env.g_up,
@@ -175,6 +178,17 @@ class PlannerEngine:
         the exact cold Li-GD chain), because a stale optimum is a worse
         start than no prior at all. The estimate and the gate are traced
         into the compiled program (no host sync); 0.0 disables the fallback.
+    sinr_backend: SINR path traced into every compiled solver program
+        ('einsum' | 'pallas' | 'pallas_interpret'; None keeps cfg's value).
+        The Pallas pairwise kernel is differentiable (custom_vjp with a
+        transposed-streaming backward kernel), so 'pallas' makes the GD hot
+        loop itself stream-tiled -- end-to-end, including the vmapped and
+        mesh-sharded fleet paths. The choice is folded into GdConfig and
+        therefore into the compiled-program cache key: already-compiled
+        programs keep the backend they were traced with, and an engine with
+        a different backend mints new cache entries instead of mutating
+        live ones (channel.set_sinr_backend's global never reaches engine
+        programs).
     warm_moment_decay: factor applied to the carried Adam moments on resume
         (inside the compiled program). The sweet spot is a *softened*
         restart: carrying the moments verbatim steers the new epoch with a
@@ -197,9 +211,19 @@ class PlannerEngine:
         warm_rho_min: float = 0.5,
         warm_moment_decay: float = 0.1,
         mesh: Mesh | None = None,
+        sinr_backend: str | None = None,
     ):
         if method not in ("li_gd", "gd"):
             raise KeyError(method)
+        if sinr_backend is not None:
+            cfg = dataclasses.replace(cfg, sinr_backend=sinr_backend)
+        # Validate the *effective* backend, whichever route supplied it
+        # (the kwarg or GdConfig(sinr_backend=...)), so a bad value fails
+        # here instead of deep inside the first plan() trace.
+        if cfg.sinr_backend not in channel.SINR_BACKENDS:
+            raise ValueError(
+                f"sinr_backend must be one of {channel.SINR_BACKENDS}, "
+                f"got {cfg.sinr_backend!r}")
         if not 0.0 <= warm_rho_min <= 1.0:
             raise ValueError(f"warm_rho_min must be in [0, 1], got {warm_rho_min}")
         if not 0.0 <= warm_moment_decay <= 1.0:
@@ -248,6 +272,12 @@ class PlannerEngine:
         """Read-only: mesh engines hold a replicated copy baked at
         construction; pass per-call weights or build a new engine."""
         return self._weights
+
+    @property
+    def sinr_backend(self) -> str:
+        """The SINR backend traced into this engine's compiled programs
+        (folded into cfg, hence into every cache key)."""
+        return self.cfg.sinr_backend
 
     def shard(self, mesh: Mesh | None) -> "PlannerEngine":
         """A twin of this engine whose fleet entry points run shard_map over

@@ -110,6 +110,85 @@ def test_engine_cache_reuse(gd_cfg):
     assert eng.cache_size() == 2          # new shape -> new program
 
 
+def test_engine_pallas_backend_matches_einsum_plan(small_env, weights):
+    """Acceptance: PlannerEngine(sinr_backend='pallas').plan(env) returns the
+    same split/allocation as the einsum engine on a small env ('pallas'
+    resolves to interpret mode on CPU)."""
+    cfg = GdConfig(max_iters=40, optimizer="adam")
+    e_ein = PlannerEngine(profiles.nin(), weights=weights, cfg=cfg)
+    e_pal = PlannerEngine(profiles.nin(), weights=weights, cfg=cfg,
+                          sinr_backend="pallas")
+    assert e_ein.sinr_backend == "einsum" and e_pal.sinr_backend == "pallas"
+    s1 = e_ein.plan(small_env)
+    s2 = e_pal.plan(small_env)
+    assert int(s1.plan.s) == int(s2.plan.s)
+    np.testing.assert_array_equal(np.asarray(s1.plan.sub_up),
+                                  np.asarray(s2.plan.sub_up))
+    np.testing.assert_array_equal(np.asarray(s1.plan.sub_dn),
+                                  np.asarray(s2.plan.sub_dn))
+    for a, b in ((s1.plan.p_up, s2.plan.p_up), (s1.plan.p_dn, s2.plan.p_dn),
+                 (s1.plan.r, s2.plan.r)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-3,
+                                   atol=1e-4)
+    np.testing.assert_allclose(float(s2.plan.utility), float(s1.plan.utility),
+                               rtol=1e-4)
+
+
+def test_engine_pallas_backend_fleet_paths(weights):
+    """The custom_vjp'd pallas_call must stay batchable: plan_many and
+    replan_many (the vmapped fleet paths) with sinr_backend='pallas' agree
+    with the einsum fleet programs per member."""
+    cfg = GdConfig(max_iters=25, optimizer="adam")
+    e_pal = PlannerEngine(profiles.nin(), weights=weights, cfg=cfg,
+                          sinr_backend="pallas")
+    e_ein = PlannerEngine(profiles.nin(), weights=weights, cfg=cfg)
+    envs = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4)
+                       for s in (0, 1)])
+    sp = e_pal.plan_many(envs)
+    se = e_ein.plan_many(envs)
+    np.testing.assert_array_equal(np.asarray(sp.plan.s), np.asarray(se.plan.s))
+    np.testing.assert_allclose(np.asarray(sp.plan.utility),
+                               np.asarray(se.plan.utility), rtol=1e-4)
+    envs2 = stack_envs([make_env(jax.random.PRNGKey(s), 8, 2, 4)
+                        for s in (2, 3)])
+    rp = e_pal.replan_many(sp, envs2)
+    re = e_ein.replan_many(se, envs2)
+    np.testing.assert_array_equal(np.asarray(rp.plan.s), np.asarray(re.plan.s))
+    np.testing.assert_allclose(np.asarray(rp.plan.utility),
+                               np.asarray(re.plan.utility), rtol=1e-4)
+
+
+def test_engine_backend_cache_keys(small_env, weights):
+    """Compiled programs keep the backend they were traced with: flipping
+    the channel-module global must neither retrace nor change a cached
+    engine program's results, while a differing engine backend mints a new
+    cache key instead of mutating the live one."""
+    import dataclasses
+
+    from repro.core import channel
+
+    cfg = GdConfig(max_iters=25, optimizer="adam")
+    eng = PlannerEngine(profiles.nin(), weights=weights, cfg=cfg)
+    ref = eng.plan(small_env)
+    assert eng.cache_size() == 1
+    prev = channel.set_sinr_backend("pallas_interpret")
+    try:
+        again = eng.plan(small_env)
+    finally:
+        channel.set_sinr_backend(prev)
+    assert eng.cache_size() == 1          # global switch: no new program
+    np.testing.assert_allclose(float(again.plan.utility),
+                               float(ref.plan.utility))
+    # a different engine backend is a different cache key (cfg is in the key)
+    eng.cfg = dataclasses.replace(cfg, sinr_backend="pallas_interpret")
+    pal = eng.plan(small_env)
+    assert eng.cache_size() == 2
+    np.testing.assert_allclose(float(pal.plan.utility),
+                               float(ref.plan.utility), rtol=1e-4)
+    with pytest.raises(ValueError, match="sinr_backend"):
+        PlannerEngine(profiles.nin(), cfg=cfg, sinr_backend="cuda")
+
+
 def test_replan_identical_env_warm_equivalence(small_env):
     """Warm-start replan on an unchanged env must not need more iterations
     than the fresh plan, and must land on an optimum at least as good."""
