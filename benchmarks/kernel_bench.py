@@ -6,12 +6,17 @@ is what the TPU schedule is designed around.
 The gradient section covers the paper-scale GD hot loop (U in {256, 625,
 1250}, M=250): one value_and_grad step of the summed user rates, einsum vs
 the custom_vjp Pallas kernel. The einsum backward materializes pairwise
-(U, V, M) temporaries; the kernel path streams them block-by-block in both
-directions, so its analytic peak is the HBM-resident g_vu input alone.
-Measured CPU times are emitted where feasible (einsum at U=64 and -- full
-mode only -- U=256 with M=250; interpret-mode kernel only at the U=64
-smoke size); the three paper-scale rows are analytic. --quick trims to
-the smoke size for CI.
+(U, V, M) temporaries; the GATHER-FREE kernel path consumes the raw
+(U, N, M) channel state (AP selection + same_cell folded in-kernel via the
+AP one-hot), so its per-grad-step data at rest is O(U*N*M) -- the N-sweep
+rows quantify that against the previous layout's ~3.2 GB g_vu gather +
+block-padded copy (BENCH_1) and against einsum's compute temporaries.
+Every noma row carries kernel_layout/blocks metadata in BENCH_<n>.json so
+the trajectory across kernel redesigns stays comparable. Measured CPU
+times are emitted where feasible (einsum at U=64 and -- full mode only --
+U=256 with M=250; interpret-mode kernel at the U=64 smoke size, swept over
+the AP count); the paper-scale rows are analytic. --quick trims the
+measured rows to the smoke sizes for CI but keeps a 2-point N-sweep.
 """
 import argparse
 import time
@@ -27,6 +32,17 @@ from benchmarks.paper_common import emit
 # VPU-aligned tiles of the deployed schedule (DESIGN.md Sec. 4).
 BU = BV = 8
 BM = 128
+# Tiles of the measured interpret-mode grad rows (coarser: interpret mode
+# pays per-block Python dispatch, so the smoke sizes use bigger blocks).
+MEAS_BLOCKS = (32, 32, 128)
+# Metadata stamped on the noma rows of the JSON artifact: BENCH_1 recorded
+# the gathered (V, U, M) layout, BENCH_2+ the gather-free raw-gain layout.
+# Rows measured/derived at other tile sizes carry their own blocks entry;
+# einsum rows (no kernel involved) carry layout=einsum and no blocks.
+NOMA_KERNEL_META = {"kernel_layout": "gather_free", "blocks": list((BU, BV, BM))}
+NOMA_MEAS_META = {"kernel_layout": "gather_free", "blocks": list(MEAS_BLOCKS)}
+NOMA_EINSUM_META = {"kernel_layout": "einsum"}
+NOMA_GATHERED_META = {"kernel_layout": "gathered", "blocks": list((BU, BV, BM))}
 
 
 def _time(f, *args, n=3):
@@ -47,6 +63,7 @@ def _grad_step(env, backend, blocks=None):
     else:
         # Same loss as the einsum branch, assembled by the kernel-backed
         # rate wrappers so the two rows time gradients of one function.
+        # The wrappers are unjitted (PR 5): this jit is the only one.
         bu, bv, bm = blocks
 
         def loss(beta, p_up, p_dn):
@@ -59,53 +76,94 @@ def _grad_step(env, backend, blocks=None):
     return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
 
 
+def _kernel_peak_bytes(u: int, n: int, m: int) -> float:
+    """Gather-free per-grad-step data at rest: the raw fp32 gains for both
+    links (the custom_vjp residuals alias them -- nothing pairwise is
+    saved) + the AP one-hot + the own-gain maps. No (V, U, M) gather, no
+    block-padded copy: boundary blocks are masked in-kernel."""
+    raw_gains = 2.0 * u * n * m * 4
+    onehot = float(u) * n * 4
+    own = 2.0 * u * m * 4
+    return raw_gains + onehot + own
+
+
 def _grad_rows(quick: bool):
-    rows = []
+    """Returns (einsum_rows, kernel_rows, gathered_rows, measured_rows) so
+    each group carries accurate layout/blocks metadata in the artifact."""
+    einsum_rows, kernel_rows, gathered_rows, meas_rows = [], [], [], []
     m_paper = 250
     # Analytic peak-memory at paper scale: the einsum grad step builds the
     # pairwise mask, its masked product, and the transposed backward product
-    # as full (U, V, M) fp32 temporaries (one uplink + one downlink set);
-    # the kernel path's pairwise-sized buffers are the HBM-resident g_vu
-    # gather plus its block-padded copy (paper dims are not block multiples;
-    # XLA may fuse gather+pad into one buffer, so 2x is the conservative
-    # bound) -- streamed through VMEM in both directions, never a pairwise
-    # compute temporary.
+    # as full (U, V, M) fp32 temporaries (one uplink + one downlink set).
+    # The gather-free kernel path holds only the O(U*N*M) raw channel state
+    # -- swept over the AP count N, since N (not U) now scales the gain
+    # operand -- streamed through VMEM in both directions.
     for u in (256, 625, 1250):
         uvm = float(u) * u * m_paper * 4
-        up = -(-u // BU) * BU
-        uvm_pad = float(-(-u // BV) * BV) * up * (-(-m_paper // BM) * BM) * 4
-        rows.append((f"noma_grad:einsum_peak_bytes:u{u}", 3 * uvm,
-                     "(U,V,M) fp32 mask+product+bwd temporaries per link"))
-        rows.append((f"noma_grad:kernel_peak_bytes:u{u}", uvm + uvm_pad,
-                     "g_vu gather + block-padded kernel copy; no pairwise "
-                     "compute temporary"))
-    fwd = vmem_block_bytes(BU, BV, BM, "fwd")
-    bwd = vmem_block_bytes(BU, BV, BM, "bwd")
-    rows.append(("noma_grad:fwd_vmem_block_bytes", float(fwd),
-                 f"(BU,BV,BM)=({BU},{BV},{BM}) inputs+scratch+out, fp32"))
-    rows.append(("noma_grad:bwd_vmem_block_bytes", float(bwd),
-                 f"backward block <= forward budget: {bwd} <= {fwd}"))
-    assert bwd <= fwd, (bwd, fwd)
+        einsum_rows.append((f"noma_grad:einsum_peak_bytes:u{u}", 3 * uvm,
+                            "(U,V,M) fp32 mask+product+bwd temporaries per link"))
+        for n in (1, 4, 16, 64):
+            kernel_rows.append((f"noma_grad:kernel_peak_bytes:u{u}_n{n}",
+                                _kernel_peak_bytes(u, n, m_paper),
+                                "raw (U,N,M) gains both links + one-hot + own; "
+                                "no gather, no padded copy"))
+    # The old gathered layout (BENCH_1 baseline) for the drop computation:
+    # g_vu gather + its block-padded kernel copy at U=1250.
+    u = 1250
+    uvm = float(u) * u * m_paper * 4
+    up = -(-u // BU) * BU
+    uvm_pad = float(-(-u // BV) * BV) * up * (-(-m_paper // BM) * BM) * 4
+    gathered_rows.append(("noma_grad:gathered_layout_peak_bytes:u1250",
+                          uvm + uvm_pad,
+                          "BENCH_1 layout: g_vu gather + block-padded copy "
+                          "(retired by the gather-free kernels)"))
+    gathered_rows.append(("noma_grad:data_at_rest_drop_ratio:u1250_n16",
+                          (uvm + uvm_pad) / _kernel_peak_bytes(u, 16, m_paper),
+                          "gathered ~3.2GB over gather-free O(U*N*M) at N=16"))
 
-    # Measured grad-step wall time. The einsum step is real CPU XLA; the
+    # Per-block VMEM budget incl. the raw-gain term: linear in N, so the
+    # N-sweep shows how far the AP count can grow before a block alone
+    # threatens the ~16MB VMEM ceiling. Reported per (direction, link) --
+    # the max over the kernels each direction launches; the composed paths
+    # (uplink fwd, downlink bwd) split the gain into a separate per-AP
+    # kernel, the fused paths (downlink fwd, uplink bwd) carry it in the
+    # pairwise kernel itself.
+    for n in (1, 4, 16, 64):
+        for direction in ("fwd", "bwd"):
+            for is_up, link in ((True, "up"), (False, "dn")):
+                b = vmem_block_bytes(BU, BV, BM, n, direction, uplink=is_up)
+                fused = (direction == "fwd") != is_up
+                kernel_rows.append(
+                    (f"noma_grad:{direction}_{link}_vmem_block_bytes:n{n}",
+                     float(b),
+                     f"(BU,BV,BM)=({BU},{BV},{BM}), N={n}, "
+                     f"{'fused' if fused else 'per-AP composed'} path"))
+
+    # Measured grad-step wall time. The einsum step is real CPU XLA (same
+    # env shapes as BENCH_1: N=4 at the U=64 smoke size, N=8 at U=256); the
     # kernel step runs the Pallas bodies in interpret mode, so it is a
-    # correctness/dispatch sanity number, not a perf claim.
+    # correctness/dispatch sanity number, not a perf claim. The kernel row
+    # is swept over N (the gain-block dimension of the gather-free layout).
     meas = [(64, 4, 64)] if quick else [(64, 4, 64), (256, 8, 250)]
-    for u, n_aps, m in meas:
-        env = make_env(jax.random.PRNGKey(5), u, n_aps, m)
+    n_sweep = (1, 4) if quick else (1, 4, 16)
+    for u, n_aps_e, m in meas:
         beta = jnp.ones((u, m)) / m
         p_up = jnp.full((u,), 0.2)
         p_dn = jnp.full((u,), 1.0)
         reps = 1 if u >= 256 else 2
+        env = make_env(jax.random.PRNGKey(5), u, n_aps_e, m)
         us_e = _time(_grad_step(env, "einsum"), beta, p_up, p_dn, n=reps)
-        rows.append((f"noma_grad:einsum_step_us:u{u}_m{m}", us_e,
-                     "CPU XLA value_and_grad, both links"))
+        einsum_rows.append((f"noma_grad:einsum_step_us:u{u}_m{m}", us_e,
+                            "CPU XLA value_and_grad, both links"))
         if u <= 64:
-            us_k = _time(_grad_step(env, None, blocks=(32, 32, 128)),
-                         beta, p_up, p_dn, n=reps)
-            rows.append((f"noma_grad:kernel_step_us:u{u}_m{m}", us_k,
-                         "CPU interpret custom_vjp (sanity, not perf)"))
-    return rows
+            for n_aps in n_sweep:
+                env_n = make_env(jax.random.PRNGKey(5), u, n_aps, m)
+                us_k = _time(_grad_step(env_n, None, blocks=MEAS_BLOCKS),
+                             beta, p_up, p_dn, n=reps)
+                meas_rows.append(
+                    (f"noma_grad:kernel_step_us:u{u}_m{m}_n{n_aps}", us_k,
+                     "CPU interpret custom_vjp (sanity, not perf)"))
+    return einsum_rows, kernel_rows, gathered_rows, meas_rows
 
 
 def run(quick: bool = False):
@@ -135,21 +193,26 @@ def run(quick: bool = False):
     rows.append(("rg_lru:vmem_block_bytes",
                  float((8 * 256 * 128 * 2 + 8 * 128) * 4),
                  "(bb,bs,bw)=(8,256,128) fp32 in+out+carry"))
+    emit("kernel_bench", rows)
 
-    # noma rates at paper-relevant tile
+    # noma rates at paper-relevant tile (jitted entry: direct eager caller)
+    noma_rows = []
     env = make_env(jax.random.PRNGKey(5), 16, 4, 8)
     beta = jnp.ones((16, 8)) / 8
     p = jnp.full((16,), 0.2)
-    us = _time(lambda e, bb, pp: ops.noma_uplink_rates(e, bb, pp,
-                                                       interpret=True),
+    us = _time(lambda e, bb, pp: ops.noma_uplink_rates_jit(e, bb, pp,
+                                                           interpret=True),
                env, beta, p, n=2)
-    rows.append(("noma_rates:interpret_us", us, "CPU interpret (sanity)"))
-    rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
-                 1250 * 1250 * 250 * 4 / 1e9,
-                 "naive (U,V,M) fp32 the kernel avoids materializing"))
+    noma_rows.append(("noma_rates:interpret_us", us, "CPU interpret (sanity)"))
+    noma_rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
+                      1250 * 1250 * 250 * 4 / 1e9,
+                      "naive (U,V,M) fp32 the kernel avoids materializing"))
 
-    rows.extend(_grad_rows(quick))
-    emit("kernel_bench", rows)
+    einsum_rows, kernel_rows, gathered_rows, meas_rows = _grad_rows(quick)
+    emit("kernel_bench", noma_rows + kernel_rows, meta=NOMA_KERNEL_META)
+    emit("kernel_bench", gathered_rows, meta=NOMA_GATHERED_META)
+    emit("kernel_bench", meas_rows, meta=NOMA_MEAS_META)
+    emit("kernel_bench", einsum_rows, meta=NOMA_EINSUM_META)
 
 
 if __name__ == "__main__":

@@ -42,9 +42,14 @@ def mean_outcomes(n_users, n_aps, n_sub, prof, w_T=W_T, seeds=N_SEEDS,
 ROWS: list[dict] = []
 
 
-def emit(name: str, rows: list[tuple]):
-    """CSV rows: (label, value, derived-annotation)."""
+def emit(name: str, rows: list[tuple], meta: dict | None = None):
+    """CSV rows: (label, value, derived-annotation). meta: extra key/values
+    attached to every JSON row (e.g. kernel layout + block sizes) so
+    BENCH_<n>.json artifacts stay comparable across kernel redesigns."""
     for label, val, derived in rows:
         print(f"{name},{label},{val:.6g},{derived}")
-        ROWS.append({"bench": name, "label": label, "value": float(val),
-                     "derived": derived})
+        row = {"bench": name, "label": label, "value": float(val),
+               "derived": derived}
+        if meta:
+            row.update(meta)
+        ROWS.append(row)

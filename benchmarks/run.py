@@ -1,7 +1,10 @@
 """Benchmark harness: one module per paper table/figure + roofline + kernels.
 Prints ``name,label,value,derived`` CSV lines and writes a machine-readable
 ``BENCH_<n>.json`` artifact (per-benchmark rows + git SHA) so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs. Rows may carry extra metadata keys via
+``paper_common.emit(..., meta=...)`` -- the noma kernel rows record the
+kernel layout (gathered in BENCH_1, gather_free from BENCH_2 on) and the
+block sizes, so artifacts stay comparable across kernel redesigns.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2_3,...] [--json PATH]
 """

@@ -18,16 +18,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Array, ComputeConstants, NetworkEnv, RadioConstants
-
-LOG2 = 0.6931471805599453
+from repro.core.types import (
+    LOG2,
+    Array,
+    ComputeConstants,
+    NetworkEnv,
+    RadioConstants,
+)
 
 # SINR backend: 'einsum' is the XLA reference; 'pallas' routes the pairwise
 # interference reductions through the tiled kernel in repro.kernels.noma_rates
 # (custom_vjp: forward AND backward stream (BU, BV, BM) blocks, so the GD
 # gradient path runs tiled at paper scale), falling back to interpret mode
-# off-TPU; 'pallas_interpret' forces interpret mode. Both backends produce
-# identical gradients to 1e-5 (tests/test_grad_kernels.py).
+# off-TPU; 'pallas_interpret' forces interpret mode. The kernels are
+# GATHER-FREE: they consume the raw (U, N, M) channel state plus the AP
+# one-hot -- no g[:, ap, :] materialization, no same_cell mask input, no
+# padded operand copies. Both backends produce identical gradients to 1e-5
+# (tests/test_grad_kernels.py).
 SINR_BACKENDS = ("einsum", "pallas", "pallas_interpret")
 _SINR_BACKEND = "einsum"
 

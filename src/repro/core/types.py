@@ -21,6 +21,10 @@ import numpy as np
 
 Array = jax.Array
 
+# ln(2), shared by every rate computation (bit/s = Hz * ln(1+SINR)/LOG2).
+# Single definition: core.channel, kernels.ops and kernels.ref import it.
+LOG2 = 0.6931471805599453
+
 
 def _register(cls):
     fields = [f.name for f in dataclasses.fields(cls)]

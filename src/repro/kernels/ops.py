@@ -15,9 +15,7 @@ import numpy as np
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.noma_rates import noma_pairwise_bwd_kernel, noma_pairwise_kernel
 from repro.kernels.rg_lru import rg_lru_kernel
-from repro.core.types import NetworkEnv
-
-LOG2 = 0.6931471805599453
+from repro.core.types import LOG2, NetworkEnv
 
 
 def _pad_to(x, mult, axis):
@@ -62,53 +60,36 @@ def flash_attention(
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
 
-def _noma_pairwise_padded(own, w_intra, w_power, g_vu, same, descending,
-                          interpret, block_u, block_v, block_m):
-    """Pad to block multiples, run the kernel, slice back to (U, M).
+def _noma_pairwise(own, w_intra, w_power, g_raw, oh, uplink, descending,
+                   interpret, block_u, block_v, block_m):
+    """Run the gather-free forward kernel on the UNPADDED operands.
 
-    The receiver (U) and interferer (V) axes are padded *independently* to
-    their own block sizes -- the kernel tiles receivers by block_u and
-    streams interferers by block_v, so padding both to block_u would read out
-    of bounds (or double-count clamped blocks) whenever block_v != block_u."""
-    u, m = own.shape
-    bm = min(block_m, m)
-    own_u_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
-    own_v_p = _pad_to(_pad_to(own, block_v, 0), bm, 1)
-    wi_p = _pad_to(_pad_to(w_intra, block_v, 0), bm, 1)
-    wp_p = _pad_to(_pad_to(w_power, block_v, 0), bm, 1)
-    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_v, 0), block_u, 1), bm, 2)
-    same_p = _pad_to(_pad_to(same, block_u, 0), block_v, 1)
-    intra, inter = noma_pairwise_kernel(
-        own_u_p, own_v_p, wi_p, wp_p, g_p, same_p,
-        descending=descending, block_u=block_u, block_v=block_v, block_m=bm,
-        n_valid=u, interpret=interpret,
-    )
-    return intra[:u, :m], inter[:u, :m]
-
-
-def _noma_pairwise_bwd_padded(own, g_vu, same, d_intra, d_inter, descending,
-                              interpret, block_u, block_v, block_m):
-    """Backward twin of _noma_pairwise_padded: pad to block multiples, run
-    the transposed-streaming kernel, slice the (V, M) weight cotangents.
-
-    The incoming cotangents are zero-padded on the receiver axis, which IS
-    the padded-receiver mask (padded u rows cannot contribute to any sum
-    over u); padded interferer rows fall off with the final slice."""
-    u, m = own.shape
-    bm = min(block_m, m)
-    own_u_p = _pad_to(_pad_to(own, block_u, 0), bm, 1)
-    own_v_p = _pad_to(_pad_to(own, block_v, 0), bm, 1)
-    g_p = _pad_to(_pad_to(_pad_to(g_vu, block_v, 0), block_u, 1), bm, 2)
-    same_vu_p = _pad_to(_pad_to(jnp.swapaxes(same, 0, 1), block_v, 0),
-                        block_u, 1)
-    di_p = _pad_to(_pad_to(d_intra.astype(jnp.float32), block_u, 0), bm, 1)
-    dx_p = _pad_to(_pad_to(d_inter.astype(jnp.float32), block_u, 0), bm, 1)
-    d_wi, d_wp = noma_pairwise_bwd_kernel(
-        own_u_p, own_v_p, g_p, same_vu_p, di_p, dx_p,
-        descending=descending, block_u=block_u, block_v=block_v, block_m=bm,
+    The kernel masks boundary blocks in-kernel (clamped cdiv grid), so no
+    _pad_to copies -- and no pad ops in the jaxpr -- on any operand; the
+    receiver (U) and interferer (V) axes still tile independently
+    (block_u vs block_v)."""
+    return noma_pairwise_kernel(
+        own, own, w_intra, w_power, g_raw, oh, oh,
+        descending=descending, uplink=uplink,
+        block_u=block_u, block_v=block_v, block_m=block_m,
         interpret=interpret,
     )
-    return d_wi[:u, :m], d_wp[:u, :m]
+
+
+def _noma_pairwise_bwd(own, g_raw, oh, d_intra, d_inter, uplink, descending,
+                       interpret, block_u, block_v, block_m):
+    """Backward twin of _noma_pairwise: the transposed-streaming kernel on
+    the same unpadded raw-gain operands; returns (V, M) weight cotangents.
+    Receiver boundary blocks are masked in-kernel (the cotangents arrive
+    unpadded, so garbage OOB lanes must not contribute)."""
+    d_wi, d_wp = noma_pairwise_bwd_kernel(
+        own, own, g_raw, oh, oh,
+        d_intra.astype(jnp.float32), d_inter.astype(jnp.float32),
+        descending=descending, uplink=uplink,
+        block_u=block_u, block_v=block_v, block_m=block_m,
+        interpret=interpret,
+    )
+    return d_wi, d_wp
 
 
 def _zeros_cot(tree):
@@ -122,23 +103,29 @@ def _zeros_cot(tree):
     return jax.tree.map(z, tree)
 
 
+def _ap_onehot(env: NetworkEnv):
+    """(U, N) fp32 serving-AP one-hot: the only pairwise-structure input the
+    gather-free kernels need (same_cell and the AP-indexed gain selection
+    are both derived from it in-kernel)."""
+    return jax.nn.one_hot(env.ap, env.n_aps, dtype=jnp.float32)
+
+
 def _up_inputs(env: NetworkEnv):
     """The uplink kernel inputs derived from the environment (all constants
-    of the GD path): own-AP gains, the interferer-major gain gather
-    g_up[v, ap[u], m] -> (V, U, M), and the same-cell mask."""
+    of the GD path): own-AP gains, the RAW (V, N, M) uplink gains -- no
+    g_up[:, ap, :] gather, the AP selection happens in-kernel -- and the
+    AP one-hot."""
     own = env.own_gain_up().astype(jnp.float32)
-    g_vu = env.g_up[:, env.ap, :].astype(jnp.float32)
-    same = env.same_cell().astype(jnp.float32)
-    return own, g_vu, same
+    g_raw = env.g_up.astype(jnp.float32)
+    return own, g_raw, _ap_onehot(env)
 
 
 def _dn_inputs(env: NetworkEnv):
-    """Downlink analogue: gain of interferer v's AP at user u,
-    g_dn[ap[v], u, m] -> (V, U, M)."""
+    """Downlink analogue: the RAW (N, U, M) downlink gains consumed
+    receiver-major (no g_dn[ap, :, :] gather, no transpose copy)."""
     own = env.own_gain_dn().astype(jnp.float32)
-    g_vu = env.g_dn[env.ap, :, :].astype(jnp.float32)
-    same = env.same_cell().astype(jnp.float32)
-    return own, g_vu, same
+    g_raw = env.g_dn.astype(jnp.float32)
+    return own, g_raw, _ap_onehot(env)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
@@ -147,20 +134,21 @@ def _pairwise_up(env, tx, interpret, block_u, block_v, block_m):
 
 
 def _pairwise_up_fwd(env, tx, interpret, block_u, block_v, block_m):
-    own, g_vu, same = _up_inputs(env)
+    own, g_raw, oh = _up_inputs(env)
     tx = tx.astype(jnp.float32)
-    out = _noma_pairwise_padded(own, tx * own, tx, g_vu, same, True,
-                                interpret, block_u, block_v, block_m)
+    out = _noma_pairwise(own, tx * own, tx, g_raw, oh, True, True,
+                         interpret, block_u, block_v, block_m)
     # Residuals are exactly the kernel inputs -- no pairwise intermediates
-    # are saved; the backward kernel re-streams the same blocks.
-    return out, (env, own, g_vu, same)
+    # are saved (g_raw aliases env.g_up, so the residual adds only the
+    # O(U*M) own gains and the O(U*N) one-hot); the backward kernel
+    # re-streams the same raw blocks.
+    return out, (env, own, g_raw, oh)
 
 
 def _pairwise_up_bwd(interpret, block_u, block_v, block_m, res, ct):
-    env, own, g_vu, same = res
-    d_wi, d_wp = _noma_pairwise_bwd_padded(own, g_vu, same, ct[0], ct[1],
-                                           True, interpret, block_u, block_v,
-                                           block_m)
+    env, own, g_raw, oh = res
+    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, oh, ct[0], ct[1], True, True,
+                                    interpret, block_u, block_v, block_m)
     # Forward fed the kernel w_intra = tx * own and w_power = tx; chain back
     # to the one differentiable input. env carries only GD-path constants.
     return _zeros_cot(env), d_wi * own + d_wp
@@ -175,18 +163,17 @@ def _pairwise_dn(env, tx, interpret, block_u, block_v, block_m):
 
 
 def _pairwise_dn_fwd(env, tx, interpret, block_u, block_v, block_m):
-    own, g_vu, same = _dn_inputs(env)
+    own, g_raw, oh = _dn_inputs(env)
     tx = tx.astype(jnp.float32)
-    out = _noma_pairwise_padded(own, tx, tx, g_vu, same, False,
-                                interpret, block_u, block_v, block_m)
-    return out, (env, own, g_vu, same)
+    out = _noma_pairwise(own, tx, tx, g_raw, oh, False, False,
+                         interpret, block_u, block_v, block_m)
+    return out, (env, own, g_raw, oh)
 
 
 def _pairwise_dn_bwd(interpret, block_u, block_v, block_m, res, ct):
-    env, own, g_vu, same = res
-    d_wi, d_wp = _noma_pairwise_bwd_padded(own, g_vu, same, ct[0], ct[1],
-                                           False, interpret, block_u, block_v,
-                                           block_m)
+    env, own, g_raw, oh = res
+    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, oh, ct[0], ct[1], False, False,
+                                    interpret, block_u, block_v, block_m)
     # Downlink feeds tx into both weight slots (the receiver-side own-gain
     # factor of eq. 8 is applied by the caller, outside the kernel).
     return _zeros_cot(env), d_wi + d_wp
@@ -195,7 +182,6 @@ def _pairwise_dn_bwd(interpret, block_u, block_v, block_m, res, ct):
 _pairwise_dn.defvjp(_pairwise_dn_fwd, _pairwise_dn_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_pairwise_up(
     env: NetworkEnv,
     tx: jax.Array,        # (U, M) beta_up * p_up
@@ -209,11 +195,15 @@ def noma_pairwise_up(
 
     Differentiable in tx (jax.custom_vjp): the backward pass is the
     transposed-streaming kernel in noma_rates.py, so the GD gradient path
-    never materializes (U, V, M) in either direction."""
+    never materializes (U, V, M) in either direction.
+
+    Deliberately NOT jitted: the hot callers (channel.uplink_sinr inside
+    gd_solve / the engine's compiled programs) are already inside jit, and
+    a nested jit only adds a closed-call trace layer. Direct eager callers
+    should use noma_pairwise_up_jit."""
     return _pairwise_up(env, tx, interpret, block_u, block_v, block_m)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_pairwise_dn(
     env: NetworkEnv,
     tx: jax.Array,        # (U, M) beta_dn * p_dn
@@ -225,11 +215,11 @@ def noma_pairwise_dn(
     """Downlink (intra, inter) terms of eq. (8). The returned intra term is
     sum_v stronger*same * tx[v]; the caller multiplies by own-gain (the
     receiver-side factor in eq. 8), matching channel.downlink_sinr.
-    Differentiable in tx via the same custom_vjp discipline as the uplink."""
+    Differentiable in tx via the same custom_vjp discipline as the uplink.
+    Unjitted for in-jit composition; see noma_pairwise_up."""
     return _pairwise_dn(env, tx, interpret, block_u, block_v, block_m)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_uplink_rates(
     env: NetworkEnv,
     beta_up: jax.Array,   # (U, M)
@@ -243,7 +233,8 @@ def noma_uplink_rates(
 
     Like channel.uplink_sinr's pallas branch, the channel gains are
     detached so the env gradient is coherently zero (the kernel's
-    custom_vjp already returns zero env cotangents)."""
+    custom_vjp already returns zero env cotangents). Unjitted for in-jit
+    composition; direct eager callers use noma_uplink_rates_jit."""
     own = jax.lax.stop_gradient(env.own_gain_up()).astype(jnp.float32)
     tx = beta_up * p_up[:, None]
     intra, inter = noma_pairwise_up(env, tx, interpret=interpret,
@@ -254,7 +245,6 @@ def noma_uplink_rates(
     return beta_up * bw * jnp.log1p(sinr) / LOG2
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_u", "block_v", "block_m"))
 def noma_downlink_rates(
     env: NetworkEnv,
     beta_dn: jax.Array,   # (U, M)
@@ -267,7 +257,8 @@ def noma_downlink_rates(
     """Kernel-backed replacement for repro.core.channel.downlink_rates:
     assembles eq. (8)'s SINR from the pairwise terms (the intra term carries
     the receiver-side own-gain factor) and applies eq. (9). Channel gains
-    are detached, as in noma_uplink_rates."""
+    are detached, as in noma_uplink_rates. Unjitted for in-jit composition;
+    direct eager callers use noma_downlink_rates_jit."""
     own = jax.lax.stop_gradient(env.own_gain_dn()).astype(jnp.float32)
     tx = beta_dn * p_dn[:, None]
     intra, inter = noma_pairwise_dn(env, tx, interpret=interpret,
@@ -276,6 +267,21 @@ def noma_downlink_rates(
     sinr = p_dn[:, None] * own / (intra * own + inter + env.noise_dn)
     bw = env.radio.bandwidth_dn_hz / env.n_sub
     return beta_dn * bw * jnp.log1p(sinr) / LOG2
+
+
+# Jitted entry points for direct (eager) callers -- benchmarks, notebooks,
+# launch scripts. The unjitted functions above remain the composable core:
+# re-entering jit from an already-jitted gd_solve/engine program was pure
+# trace overhead.
+_NOMA_STATIC = ("interpret", "block_u", "block_v", "block_m")
+noma_pairwise_up_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(
+    noma_pairwise_up)
+noma_pairwise_dn_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(
+    noma_pairwise_dn)
+noma_uplink_rates_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(
+    noma_uplink_rates)
+noma_downlink_rates_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(
+    noma_downlink_rates)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b", "block_s", "block_w"))

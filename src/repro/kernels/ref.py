@@ -4,8 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import LOG2  # noqa: F401  (re-export; single definition)
+
 NEG_INF = -1e30
-LOG2 = 0.6931471805599453
 
 
 def flash_attention_ref(q, k, v, group: int, causal=True, window=0,
@@ -55,6 +56,37 @@ def noma_pairwise_ref(own_u, own_v, w_intra, w_power, g_vu, same_cell,
     inter = jnp.einsum(
         "uv,vm,vum->um", (~same_cell).astype(w_power.dtype), w_power, g_vu
     )
+    return intra, inter
+
+
+def noma_pairwise_gather_free_ref(own_u, own_v, w_intra, w_power, g_raw, ap,
+                                  descending: bool, uplink: bool):
+    """Oracle for the GATHER-FREE kernel signature (kernels/noma_rates.py).
+
+    Same math as noma_pairwise_ref, but from the raw channel state: the
+    AP-indexed gain selection and the same_cell mask are derived from the
+    per-user AP assignment, mirroring the in-kernel one-hot contraction.
+
+    g_raw: uplink (V, N, M) raw g_up; downlink (N, U, M) raw g_dn
+    ap: (U,) int32 serving-AP ids (U == V: interferers are the same users)
+    """
+    n_aps = g_raw.shape[1] if uplink else g_raw.shape[0]
+    oh = jax.nn.one_hot(ap, n_aps, dtype=w_power.dtype)       # (U, N)
+    if descending:
+        cmp = own_v[None, :, :] < own_u[:, None, :]           # (U, V, M)
+    else:
+        cmp = own_v[None, :, :] > own_u[:, None, :]
+    same = jnp.einsum("un,vn->uv", oh, oh) > 0.5
+    intra = jnp.sum(jnp.where(cmp & same[:, :, None], w_intra[None, :, :], 0.0),
+                    axis=1)
+    if uplink:
+        # inter[u,m] = sum_n oh[u,n] * sum_v (1-oh[v,n]) w_power[v,m] g[v,n,m]
+        per_ap = jnp.einsum("vn,vm,vnm->nm", 1.0 - oh, w_power, g_raw)
+        inter = jnp.einsum("un,nm->um", oh, per_ap)
+    else:
+        # inter[u,m] = sum_n (1-oh[u,n]) * g[n,u,m] * sum_v oh[v,n] w_power[v,m]
+        ap_tx = jnp.einsum("vn,vm->nm", oh, w_power)
+        inter = jnp.einsum("un,num,nm->um", 1.0 - oh, g_raw, ap_tx)
     return intra, inter
 
 

@@ -31,7 +31,7 @@ def _assert_grads_close(ga, gb):
                                    atol=1e-5 * max(np.abs(a).max(), 1e-30))
 
 
-@pytest.mark.parametrize("u,n,m", [(8, 2, 4), (10, 3, 6)])
+@pytest.mark.parametrize("u,n,m", [(8, 2, 4), (10, 3, 6), (9, 1, 12)])
 def test_rates_grad_parity_both_links(u, n, m):
     env = make_env(jax.random.PRNGKey(u), n_users=u, n_aps=n, n_sub=m)
     beta, p_up, p_dn = _vars(jax.random.PRNGKey(1), u, m)
@@ -145,7 +145,10 @@ def test_downlink_rates_wrapper_parity(small_env):
 # ---------------------------------------------------------------------------
 # jaxpr discipline: the pallas-backed grad step must not compute through any
 # (U, V, M) arithmetic intermediate -- that tensor only streams through the
-# kernels block by block.
+# kernels block by block -- must not gather a (V, U, M) AP-indexed gain
+# (the gather-free kernels select the AP in-kernel from the raw (U, N, M)
+# state), and must not pad any kernel operand (boundary blocks are masked
+# in-kernel, so the gain and every other input enter pallas_call unpadded).
 # ---------------------------------------------------------------------------
 _ARITH = {"mul", "add", "sub", "div", "select_n", "lt", "gt", "le", "ge",
           "and", "or", "max", "min", "log1p", "exp", "integer_pow", "pow"}
@@ -160,7 +163,7 @@ def _subjaxprs(param):
             yield p
 
 
-def _pairwise_arith_eqns(jaxpr, n_users, acc):
+def _walk_eqns(jaxpr, n_users, arith, gathers, pads):
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "pallas_call":
             # The kernel body works on (BU, BV, BM) VMEM blocks; at toy
@@ -169,13 +172,26 @@ def _pairwise_arith_eqns(jaxpr, n_users, acc):
             continue
         for param in eqn.params.values():
             for sub in _subjaxprs(param):
-                _pairwise_arith_eqns(sub, n_users, acc)
+                _walk_eqns(sub, n_users, arith, gathers, pads)
+        shapes = [getattr(v.aval, "shape", ()) for v in eqn.outvars]
+        if eqn.primitive.name == "pad":
+            # No kernel operand is padded any more; 3D pads would be the
+            # gain (the largest input and the one the issue gates on).
+            for shp in shapes:
+                if len(shp) >= 3:
+                    pads.append((eqn.primitive.name, shp))
+        if eqn.primitive.name == "gather":
+            # The own-gain take_along_axis produces (U, 1, M); a pairwise
+            # (>=U, >=U, M) gather is the g[:, ap, :] materialization.
+            for shp in shapes:
+                if (len(shp) == 3 and shp[0] >= n_users
+                        and shp[1] >= n_users):
+                    gathers.append((eqn.primitive.name, shp))
         if eqn.primitive.name not in _ARITH:
             continue
-        for v in eqn.outvars:
-            shp = getattr(v.aval, "shape", ())
+        for shp in shapes:
             if len(shp) == 3 and shp[0] >= n_users and shp[1] >= n_users:
-                acc.append((eqn.primitive.name, shp))
+                arith.append((eqn.primitive.name, shp))
 
 
 def test_no_pairwise_intermediate_in_pallas_grad_jaxpr():
@@ -193,10 +209,13 @@ def test_no_pairwise_intermediate_in_pallas_grad_jaxpr():
 
     flagged = {}
     for backend in ("einsum", "pallas_interpret"):
-        acc = []
-        _pairwise_arith_eqns(jax.make_jaxpr(grad_step(backend))(v0).jaxpr,
-                             u, acc)
-        flagged[backend] = acc
+        arith, gathers, pads = [], [], []
+        _walk_eqns(jax.make_jaxpr(grad_step(backend))(v0).jaxpr,
+                   u, arith, gathers, pads)
+        flagged[backend] = (arith, gathers, pads)
     # positive control: the einsum grad does materialize pairwise tensors
-    assert len(flagged["einsum"]) >= 2, flagged["einsum"]
-    assert flagged["pallas_interpret"] == [], flagged["pallas_interpret"]
+    assert len(flagged["einsum"][0]) >= 2, flagged["einsum"]
+    arith, gathers, pads = flagged["pallas_interpret"]
+    assert arith == [], arith
+    assert gathers == [], gathers    # no g[:, ap, :] (V, U, M) gather
+    assert pads == [], pads          # no _pad_to copy of the gain operand

@@ -67,9 +67,9 @@ def test_rg_lru_sweep(b, s, w, bs, bw, with_h0):
     "u,n,m,bu,bm",
     [
         (6, 2, 4, 4, 4),
-        (10, 3, 6, 4, 8),    # pads users + subchannels
+        (10, 3, 6, 4, 8),    # non-divisible users + subchannels
         (16, 4, 8, 8, 8),
-        (9, 2, 12, 8, 8),
+        (9, 2, 12, 8, 8),    # non-divisible M too (12 % 8 != 0)
     ],
 )
 def test_noma_rates_sweep(u, n, m, bu, bm):
@@ -135,3 +135,71 @@ def test_noma_pairwise_oracle_matches_channel_decomposition(small_env):
         np.asarray(sinr), np.asarray(channel.uplink_sinr(env, beta, p)),
         rtol=1e-4,
     )
+
+
+def _gather_free_case(u, n, m, seed=0):
+    env = make_env(jax.random.PRNGKey(seed), n_users=u, n_aps=n, n_sub=m)
+    beta = jax.random.dirichlet(jax.random.PRNGKey(seed + 1), jnp.ones(m), (u,))
+    p = jax.random.uniform(jax.random.PRNGKey(seed + 2), (u,),
+                           minval=0.01, maxval=0.3)
+    tx = (beta * p[:, None]).astype(jnp.float32)
+    own_up = env.own_gain_up().astype(jnp.float32)
+    own_dn = env.own_gain_dn().astype(jnp.float32)
+    return env, tx, own_up, own_dn
+
+
+@pytest.mark.parametrize("u,n,m,bu,bv,bm", [
+    (10, 3, 6, 4, 8, 8),     # non-divisible U/V/M, mismatched block_u/block_v
+    (20, 3, 6, 16, 8, 8),
+    (13, 5, 7, 8, 4, 128),
+])
+@pytest.mark.parametrize("uplink", [True, False])
+@pytest.mark.parametrize("descending", [True, False])
+def test_noma_gather_free_parity(u, n, m, bu, bv, bm, uplink, descending):
+    """The gather-free kernel (raw gains + AP one-hot in, AP selection and
+    same_cell derived in-kernel) matches BOTH oracles at 1e-5: the old
+    gathered-kernel reference (explicit g_vu = g[*, ap, *] + same mask --
+    the math the pre-gather kernel computed) and the gather-free reference,
+    for both links and both SIC orders."""
+    from repro.kernels.noma_rates import noma_pairwise_kernel
+
+    env, tx, own_up, own_dn = _gather_free_case(u, n, m, seed=u + n)
+    own = own_up if uplink else own_dn
+    g_raw = (env.g_up if uplink else env.g_dn).astype(jnp.float32)
+    oh = jax.nn.one_hot(env.ap, n, dtype=jnp.float32)
+    w_intra = tx * own if uplink else tx
+
+    ki, kx = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, oh, oh,
+                                  descending=descending, uplink=uplink,
+                                  block_u=bu, block_v=bv, block_m=bm,
+                                  interpret=True)
+    gi, gx = ref.noma_pairwise_gather_free_ref(own, own, w_intra, tx, g_raw,
+                                               env.ap, descending=descending,
+                                               uplink=uplink)
+    g_vu = (env.g_up[:, env.ap, :] if uplink
+            else env.g_dn[env.ap, :, :]).astype(jnp.float32)
+    oi, ox = ref.noma_pairwise_ref(own, own, w_intra, tx, g_vu,
+                                   env.same_cell(), descending=descending)
+    for got, want in ((ki, gi), (kx, gx), (ki, oi), (kx, ox)):
+        got, want = np.asarray(got), np.asarray(want)
+        np.testing.assert_allclose(
+            got, want, rtol=1e-5, atol=1e-5 * max(np.abs(want).max(), 1e-30))
+
+
+@pytest.mark.parametrize("uplink", [True, False])
+def test_noma_gather_free_single_cell_inter_is_exactly_zero(uplink):
+    """N=1: every user shares the one AP, so the inter-cell term must be
+    EXACTLY zero (the in-kernel (1 - onehot) factor is identically 0.0),
+    not merely small."""
+    from repro.kernels.noma_rates import noma_pairwise_kernel
+
+    env, tx, own_up, own_dn = _gather_free_case(9, 1, 12, seed=3)
+    own = own_up if uplink else own_dn
+    g_raw = (env.g_up if uplink else env.g_dn).astype(jnp.float32)
+    oh = jax.nn.one_hot(env.ap, 1, dtype=jnp.float32)
+    w_intra = tx * own if uplink else tx
+    _, inter = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, oh, oh,
+                                    descending=uplink, uplink=uplink,
+                                    block_u=8, block_v=8, block_m=8,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(inter), 0.0)
