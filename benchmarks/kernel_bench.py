@@ -5,18 +5,27 @@ is what the TPU schedule is designed around.
 
 The gradient section covers the paper-scale GD hot loop (U in {256, 625,
 1250}, M=250): one value_and_grad step of the summed user rates, einsum vs
-the custom_vjp Pallas kernel. The einsum backward materializes pairwise
-(U, V, M) temporaries; the GATHER-FREE kernel path consumes the raw
-(U, N, M) channel state (AP selection + same_cell folded in-kernel via the
-AP one-hot), so its per-grad-step data at rest is O(U*N*M) -- the N-sweep
-rows quantify that against the previous layout's ~3.2 GB g_vu gather +
-block-padded copy (BENCH_1) and against einsum's compute temporaries.
+the custom_vjp Pallas kernels. The einsum backward materializes pairwise
+(U, V, M) temporaries; the CELL-BLOCK kernel path consumes the raw
+(U, N, M) channel state plus the int32 AP ids (AP selection + same_cell
+are in-kernel id compares), N-tiles every gain-carrying accumulator (per-
+block VMEM is a function of BN only -- the large-N sweep shows N=4096
+fitting the exact budget N=16 uses), and with a CellLayout restricts the
+intra/SIC grid to same-cell block-diagonal tiles (sum-of-cell-sizes^2
+pairwise work, not U^2).
+
+Timing discipline: _time reports best-of-n AND median-of-n with the
+spread, and every measured row carries the full stats as row metadata --
+autotune selections are made off the median, never a single noisy minimum.
+The (BU, BV, BM, BN) autotune sweep times the interpret-mode grad step
+over AUTOTUNE_BLOCKS (2 candidates under --quick), records the whole
+tuning table in the artifact, and stamps the selected row. ap_mode (iota
+id-compare vs streamed one-hot MXU contraction) is profiled the same way.
 Every noma row carries kernel_layout/blocks metadata in BENCH_<n>.json so
-the trajectory across kernel redesigns stays comparable. Measured CPU
-times are emitted where feasible (einsum at U=64 and -- full mode only --
-U=256 with M=250; interpret-mode kernel at the U=64 smoke size, swept over
-the AP count); the paper-scale rows are analytic. --quick trims the
-measured rows to the smoke sizes for CI but keeps a 2-point N-sweep.
+the trajectory across kernel redesigns stays comparable (BENCH_1 gathered,
+BENCH_2 gather_free, BENCH_3+ cell_block). --quick trims the measured rows
+to the smoke sizes for CI but keeps a 2-point N-sweep and a 2-point
+autotune sweep.
 """
 import argparse
 import time
@@ -25,35 +34,62 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import channel, make_env
-from repro.kernels import ops, ref
-from repro.kernels.noma_rates import vmem_block_bytes
+from repro.kernels import build_cell_layout, ops
+from repro.kernels.noma_rates import (AUTOTUNE_BLOCKS, VMEM_CEILING_BYTES,
+                                      vmem_block_bytes)
 from benchmarks.paper_common import emit
 
 # VPU-aligned tiles of the deployed schedule (DESIGN.md Sec. 4).
 BU = BV = 8
 BM = 128
+BN = 8
 # Tiles of the measured interpret-mode grad rows (coarser: interpret mode
 # pays per-block Python dispatch, so the smoke sizes use bigger blocks).
-MEAS_BLOCKS = (32, 32, 128)
+MEAS_BLOCKS = (32, 32, 128, 8)
 # Metadata stamped on the noma rows of the JSON artifact: BENCH_1 recorded
-# the gathered (V, U, M) layout, BENCH_2+ the gather-free raw-gain layout.
-# Rows measured/derived at other tile sizes carry their own blocks entry;
-# einsum rows (no kernel involved) carry layout=einsum and no blocks.
-NOMA_KERNEL_META = {"kernel_layout": "gather_free", "blocks": list((BU, BV, BM))}
-NOMA_MEAS_META = {"kernel_layout": "gather_free", "blocks": list(MEAS_BLOCKS)}
+# the gathered (V, U, M) layout, BENCH_2 the gather-free one-hot layout,
+# BENCH_3+ the cell-block layout (N-tiled accumulators + block-diagonal
+# intra tiles from a CellLayout). Rows measured/derived at other tile sizes
+# carry their own blocks entry; einsum rows (no kernel involved) carry
+# layout=einsum and no blocks.
+NOMA_KERNEL_META = {"kernel_layout": "cell_block",
+                    "blocks": list((BU, BV, BM, BN))}
+NOMA_MEAS_META = {"kernel_layout": "cell_block", "blocks": list(MEAS_BLOCKS)}
 NOMA_EINSUM_META = {"kernel_layout": "einsum"}
 NOMA_GATHERED_META = {"kernel_layout": "gathered", "blocks": list((BU, BV, BM))}
 
+# Smoke size for the measured interpret-mode sweeps (autotune + ap_mode):
+# big enough that block sizes change the schedule, small enough that the
+# per-block Python dispatch of interpret mode stays tractable on CPU.
+SMOKE_U, SMOKE_N, SMOKE_M = 48, 6, 32
+
 
 def _time(f, *args, n=3):
+    """best/median/spread timing stats over n timed reps (after one
+    blocking warm-up that absorbs compilation). spread_pct is
+    (worst - best) / median: the autotuner gates on medians and records
+    the spread so a single noisy minimum can never pick the winner."""
     jax.block_until_ready(f(*args))          # warm up once, block on all outputs
-    t0 = time.time()
+    times = []
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(f(*args))
-    return (time.time() - t0) / n * 1e6
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    best = times[0]
+    median = times[len(times) // 2]
+    return {"best_us": best, "median_us": median,
+            "spread_pct": 100.0 * (times[-1] - best) / max(median, 1e-9),
+            "reps": n}
 
 
-def _grad_step(env, backend, blocks=None):
+def _stats_meta(stats):
+    """Per-row metadata for a measured row: the full timing stats."""
+    return {k: (round(v, 3) if isinstance(v, float) else v)
+            for k, v in stats.items()}
+
+
+def _grad_step(env, backend, blocks=None, layout=None, ap_mode="iota"):
     """jitted value_and_grad of the summed rates -- one GD hot-loop step."""
     if blocks is None:
         def loss(beta, p_up, p_dn):
@@ -64,27 +100,102 @@ def _grad_step(env, backend, blocks=None):
         # Same loss as the einsum branch, assembled by the kernel-backed
         # rate wrappers so the two rows time gradients of one function.
         # The wrappers are unjitted (PR 5): this jit is the only one.
-        bu, bv, bm = blocks
+        bu, bv, bm, bn = blocks
 
         def loss(beta, p_up, p_dn):
             r_up = ops.noma_uplink_rates(env, beta, p_up, interpret=True,
-                                         block_u=bu, block_v=bv, block_m=bm)
+                                         block_u=bu, block_v=bv, block_m=bm,
+                                         block_n=bn, layout=layout,
+                                         ap_mode=ap_mode)
             r_dn = ops.noma_downlink_rates(env, beta, p_dn, interpret=True,
-                                           block_u=bu, block_v=bv, block_m=bm)
+                                           block_u=bu, block_v=bv,
+                                           block_m=bm, block_n=bn,
+                                           layout=layout, ap_mode=ap_mode)
             return jnp.sum(r_up) + jnp.sum(r_dn)
 
     return jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))
 
 
 def _kernel_peak_bytes(u: int, n: int, m: int) -> float:
-    """Gather-free per-grad-step data at rest: the raw fp32 gains for both
+    """Cell-block per-grad-step data at rest: the raw fp32 gains for both
     links (the custom_vjp residuals alias them -- nothing pairwise is
-    saved) + the AP one-hot + the own-gain maps. No (V, U, M) gather, no
-    block-padded copy: boundary blocks are masked in-kernel."""
+    saved) + the int32 AP ids (no O(U*N) one-hot under ap_mode=iota) + the
+    own-gain maps. No (V, U, M) gather, no block-padded copy: boundary
+    blocks are masked in-kernel."""
     raw_gains = 2.0 * u * n * m * 4
-    onehot = float(u) * n * 4
+    ap_ids = float(u) * 4
     own = 2.0 * u * m * 4
-    return raw_gains + onehot + own
+    return raw_gains + ap_ids + own
+
+
+def _autotune_rows(quick: bool):
+    """Measured (BU, BV, BM, BN) sweep: interpret-mode grad step per
+    candidate at the smoke size, cell-block layout. Returns the rows (one
+    per candidate, full timing stats as row meta, vmem-filtered) plus a
+    selected-winner row -- the artifact carries the whole tuning table, so
+    future PRs can compare like-for-like before re-tuning."""
+    env = make_env(jax.random.PRNGKey(11), SMOKE_U, SMOKE_N, SMOKE_M)
+    beta = jnp.ones((SMOKE_U, SMOKE_M)) / SMOKE_M
+    p_up = jnp.full((SMOKE_U,), 0.2)
+    p_dn = jnp.full((SMOKE_U,), 1.0)
+    candidates = AUTOTUNE_BLOCKS[:2] if quick else AUTOTUNE_BLOCKS
+    rows, table = [], []
+    for blocks in candidates:
+        bu, bv, bm, bn = blocks
+        vmem = max(vmem_block_bytes(bu, bv, bm, bn, n_aps=SMOKE_N,
+                                    direction=d, uplink=l)
+                   for d in ("fwd", "bwd") for l in (True, False))
+        if vmem >= VMEM_CEILING_BYTES:
+            rows.append((f"noma_autotune:skipped:bu{bu}_bv{bv}_bm{bm}_bn{bn}",
+                         float(vmem), "over VMEM ceiling, not timed",
+                         {"blocks": list(blocks)}))
+            continue
+        layout = build_cell_layout(env, block_u=bu, block_v=bv)
+        stats = _time(_grad_step(env, None, blocks=blocks, layout=layout),
+                      beta, p_up, p_dn, n=2 if quick else 3)
+        meta = {"blocks": list(blocks), "vmem_block_bytes": float(vmem),
+                **_stats_meta(stats)}
+        rows.append((f"noma_autotune:step_us:bu{bu}_bv{bv}_bm{bm}_bn{bn}",
+                     stats["median_us"],
+                     f"interpret grad step, U={SMOKE_U} N={SMOKE_N} "
+                     f"M={SMOKE_M} (median of {stats['reps']})", meta))
+        table.append((stats["median_us"], blocks, meta))
+    if table:
+        best_us, best_blocks, best_meta = min(table, key=lambda t: t[0])
+        rows.append(("noma_autotune:selected_us", best_us,
+                     f"winner {best_blocks} by median-of-n",
+                     {**best_meta, "selected": True}))
+    return rows
+
+
+def _ap_mode_rows(quick: bool):
+    """ap_mode profile at the smoke size: 'iota' derives the AP one-hot
+    block in-kernel from the int32 ids (no O(U*N) HBM operand at all --
+    the SMEM-resident scalar-prefetch tile lists already index every block
+    load); 'onehot' streams the PR-5 style (U, N) one-hot for the MXU
+    contraction layout. Both stay available behind the kernel flag; the
+    measured winner is stamped so the default is an artifact-recorded
+    choice, not folklore."""
+    env = make_env(jax.random.PRNGKey(12), SMOKE_U, SMOKE_N, SMOKE_M)
+    layout = build_cell_layout(env, block_u=MEAS_BLOCKS[0],
+                               block_v=MEAS_BLOCKS[1])
+    beta = jnp.ones((SMOKE_U, SMOKE_M)) / SMOKE_M
+    p_up = jnp.full((SMOKE_U,), 0.2)
+    p_dn = jnp.full((SMOKE_U,), 1.0)
+    rows, timed = [], {}
+    for mode in ("iota", "onehot"):
+        stats = _time(_grad_step(env, None, blocks=MEAS_BLOCKS,
+                                 layout=layout, ap_mode=mode),
+                      beta, p_up, p_dn, n=2 if quick else 3)
+        timed[mode] = stats["median_us"]
+        rows.append((f"noma_ap_mode:step_us:{mode}", stats["median_us"],
+                     "interpret grad step (median)", _stats_meta(stats)))
+    winner = min(timed, key=timed.get)
+    rows.append((f"noma_ap_mode:selected:{winner}", timed[winner],
+                 "kernel-flag default candidate; iota also removes the "
+                 "O(U*N) one-hot from HBM entirely",
+                 {"selected": True, "ap_mode": winner}))
+    return rows
 
 
 def _grad_rows(quick: bool):
@@ -95,7 +206,7 @@ def _grad_rows(quick: bool):
     # Analytic peak-memory at paper scale: the einsum grad step builds the
     # pairwise mask, its masked product, and the transposed backward product
     # as full (U, V, M) fp32 temporaries (one uplink + one downlink set).
-    # The gather-free kernel path holds only the O(U*N*M) raw channel state
+    # The cell-block kernel path holds only the O(U*N*M) raw channel state
     # -- swept over the AP count N, since N (not U) now scales the gain
     # operand -- streamed through VMEM in both directions.
     for u in (256, 625, 1250):
@@ -105,8 +216,8 @@ def _grad_rows(quick: bool):
         for n in (1, 4, 16, 64):
             kernel_rows.append((f"noma_grad:kernel_peak_bytes:u{u}_n{n}",
                                 _kernel_peak_bytes(u, n, m_paper),
-                                "raw (U,N,M) gains both links + one-hot + own; "
-                                "no gather, no padded copy"))
+                                "raw (U,N,M) gains both links + int32 ap ids "
+                                "+ own; no gather, no one-hot, no padded copy"))
     # The old gathered layout (BENCH_1 baseline) for the drop computation:
     # g_vu gather + its block-padded kernel copy at U=1250.
     u = 1250
@@ -119,50 +230,57 @@ def _grad_rows(quick: bool):
                           "(retired by the gather-free kernels)"))
     gathered_rows.append(("noma_grad:data_at_rest_drop_ratio:u1250_n16",
                           (uvm + uvm_pad) / _kernel_peak_bytes(u, 16, m_paper),
-                          "gathered ~3.2GB over gather-free O(U*N*M) at N=16"))
+                          "gathered ~3.2GB over cell-block O(U*N*M) at N=16"))
 
-    # Per-block VMEM budget incl. the raw-gain term: linear in N, so the
-    # N-sweep shows how far the AP count can grow before a block alone
-    # threatens the ~16MB VMEM ceiling. Reported per (direction, link) --
-    # the max over the kernels each direction launches; the composed paths
-    # (uplink fwd, downlink bwd) split the gain into a separate per-AP
-    # kernel, the fused paths (downlink fwd, uplink bwd) carry it in the
-    # pairwise kernel itself.
-    for n in (1, 4, 16, 64):
+    # Per-block VMEM budget: with the N-tiled accumulators every term is a
+    # function of the BLOCK sizes only, so the large-N sweep is flat --
+    # N=4096 fits the exact budget N=16 uses (n_aps only clamps BN). This
+    # is the massive-connectivity headline: the AP count stopped being a
+    # VMEM term at all (the BENCH_2 budget grew ~4 KiB per AP).
+    for n in (16, 64, 256, 1024, 4096):
         for direction in ("fwd", "bwd"):
             for is_up, link in ((True, "up"), (False, "dn")):
-                b = vmem_block_bytes(BU, BV, BM, n, direction, uplink=is_up)
-                fused = (direction == "fwd") != is_up
+                b = vmem_block_bytes(BU, BV, BM, BN, n_aps=n,
+                                     direction=direction, uplink=is_up)
                 kernel_rows.append(
                     (f"noma_grad:{direction}_{link}_vmem_block_bytes:n{n}",
                      float(b),
-                     f"(BU,BV,BM)=({BU},{BV},{BM}), N={n}, "
-                     f"{'fused' if fused else 'per-AP composed'} path"))
+                     f"(BU,BV,BM,BN)=({BU},{BV},{BM},{BN}); O(BN) budget, "
+                     "independent of total N"))
 
     # Measured grad-step wall time. The einsum step is real CPU XLA (same
     # env shapes as BENCH_1: N=4 at the U=64 smoke size, N=8 at U=256); the
     # kernel step runs the Pallas bodies in interpret mode, so it is a
     # correctness/dispatch sanity number, not a perf claim. The kernel row
-    # is swept over N (the gain-block dimension of the gather-free layout).
+    # is swept over N (the gain-block dimension); non-divisible N=13
+    # exercises the iota-masked boundary N block in a measured row.
     meas = [(64, 4, 64)] if quick else [(64, 4, 64), (256, 8, 250)]
-    n_sweep = (1, 4) if quick else (1, 4, 16)
+    n_sweep = (1, 4) if quick else (1, 4, 13, 16)
     for u, n_aps_e, m in meas:
         beta = jnp.ones((u, m)) / m
         p_up = jnp.full((u,), 0.2)
         p_dn = jnp.full((u,), 1.0)
         reps = 1 if u >= 256 else 2
         env = make_env(jax.random.PRNGKey(5), u, n_aps_e, m)
-        us_e = _time(_grad_step(env, "einsum"), beta, p_up, p_dn, n=reps)
-        einsum_rows.append((f"noma_grad:einsum_step_us:u{u}_m{m}", us_e,
-                            "CPU XLA value_and_grad, both links"))
+        st_e = _time(_grad_step(env, "einsum"), beta, p_up, p_dn, n=reps)
+        einsum_rows.append((f"noma_grad:einsum_step_us:u{u}_m{m}",
+                            st_e["median_us"],
+                            "CPU XLA value_and_grad, both links (median)",
+                            _stats_meta(st_e)))
         if u <= 64:
             for n_aps in n_sweep:
                 env_n = make_env(jax.random.PRNGKey(5), u, n_aps, m)
-                us_k = _time(_grad_step(env_n, None, blocks=MEAS_BLOCKS),
+                layout = build_cell_layout(env_n, block_u=MEAS_BLOCKS[0],
+                                           block_v=MEAS_BLOCKS[1])
+                st_k = _time(_grad_step(env_n, None, blocks=MEAS_BLOCKS,
+                                        layout=layout),
                              beta, p_up, p_dn, n=reps)
                 meas_rows.append(
-                    (f"noma_grad:kernel_step_us:u{u}_m{m}_n{n_aps}", us_k,
-                     "CPU interpret custom_vjp (sanity, not perf)"))
+                    (f"noma_grad:kernel_step_us:u{u}_m{m}_n{n_aps}",
+                     st_k["median_us"],
+                     "CPU interpret custom_vjp, cell-block layout "
+                     "(sanity, not perf; median)",
+                     {**_stats_meta(st_k), "n_tiles": layout.n_tiles}))
     return einsum_rows, kernel_rows, gathered_rows, meas_rows
 
 
@@ -180,16 +298,18 @@ def run(quick: bool = False):
     q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 4, 64), jnp.bfloat16)
     k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64), jnp.bfloat16)
     v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64), jnp.bfloat16)
-    us = _time(lambda a, b, c: ops.flash_attention(a, b, c, interpret=True,
+    st = _time(lambda a, b, c: ops.flash_attention(a, b, c, interpret=True,
                                                    block_q=64, block_k=64),
                q, k, v, n=2)
-    rows.append(("flash_attention:interpret_us", us, "CPU interpret (sanity)"))
+    rows.append(("flash_attention:interpret_us", st["median_us"],
+                 "CPU interpret (sanity)", _stats_meta(st)))
 
     # rg_lru
     la = -jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4, 512, 128)))
     b = jax.random.normal(jax.random.PRNGKey(4), (4, 512, 128))
-    us = _time(lambda x, y: ops.rg_lru(x, y, interpret=True), la, b, n=2)
-    rows.append(("rg_lru:interpret_us", us, "CPU interpret (sanity)"))
+    st = _time(lambda x, y: ops.rg_lru(x, y, interpret=True), la, b, n=2)
+    rows.append(("rg_lru:interpret_us", st["median_us"],
+                 "CPU interpret (sanity)", _stats_meta(st)))
     rows.append(("rg_lru:vmem_block_bytes",
                  float((8 * 256 * 128 * 2 + 8 * 128) * 4),
                  "(bb,bs,bw)=(8,256,128) fp32 in+out+carry"))
@@ -200,10 +320,11 @@ def run(quick: bool = False):
     env = make_env(jax.random.PRNGKey(5), 16, 4, 8)
     beta = jnp.ones((16, 8)) / 8
     p = jnp.full((16,), 0.2)
-    us = _time(lambda e, bb, pp: ops.noma_uplink_rates_jit(e, bb, pp,
+    st = _time(lambda e, bb, pp: ops.noma_uplink_rates_jit(e, bb, pp,
                                                            interpret=True),
                env, beta, p, n=2)
-    noma_rows.append(("noma_rates:interpret_us", us, "CPU interpret (sanity)"))
+    noma_rows.append(("noma_rates:interpret_us", st["median_us"],
+                      "CPU interpret (sanity)", _stats_meta(st)))
     noma_rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
                       1250 * 1250 * 250 * 4 / 1e9,
                       "naive (U,V,M) fp32 the kernel avoids materializing"))
@@ -213,6 +334,8 @@ def run(quick: bool = False):
     emit("kernel_bench", gathered_rows, meta=NOMA_GATHERED_META)
     emit("kernel_bench", meas_rows, meta=NOMA_MEAS_META)
     emit("kernel_bench", einsum_rows, meta=NOMA_EINSUM_META)
+    emit("kernel_bench", _autotune_rows(quick), meta=NOMA_KERNEL_META)
+    emit("kernel_bench", _ap_mode_rows(quick), meta=NOMA_MEAS_META)
 
 
 if __name__ == "__main__":

@@ -43,13 +43,20 @@ ROWS: list[dict] = []
 
 
 def emit(name: str, rows: list[tuple], meta: dict | None = None):
-    """CSV rows: (label, value, derived-annotation). meta: extra key/values
-    attached to every JSON row (e.g. kernel layout + block sizes) so
-    BENCH_<n>.json artifacts stay comparable across kernel redesigns."""
-    for label, val, derived in rows:
+    """CSV rows: (label, value, derived-annotation) or (label, value,
+    derived, row_meta) -- a 4th dict entry attaches per-row key/values
+    (e.g. timing spread, tuning-table entries) on top of the shared meta.
+    meta: extra key/values attached to every JSON row (e.g. kernel layout +
+    block sizes) so BENCH_<n>.json artifacts stay comparable across kernel
+    redesigns. Per-row meta wins on key collisions."""
+    for r in rows:
+        label, val, derived = r[0], r[1], r[2]
+        row_meta = r[3] if len(r) > 3 else None
         print(f"{name},{label},{val:.6g},{derived}")
         row = {"bench": name, "label": label, "value": float(val),
                "derived": derived}
         if meta:
             row.update(meta)
+        if row_meta:
+            row.update(row_meta)
         ROWS.append(row)

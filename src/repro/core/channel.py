@@ -27,14 +27,19 @@ from repro.core.types import (
 )
 
 # SINR backend: 'einsum' is the XLA reference; 'pallas' routes the pairwise
-# interference reductions through the tiled kernel in repro.kernels.noma_rates
-# (custom_vjp: forward AND backward stream (BU, BV, BM) blocks, so the GD
-# gradient path runs tiled at paper scale), falling back to interpret mode
-# off-TPU; 'pallas_interpret' forces interpret mode. The kernels are
-# GATHER-FREE: they consume the raw (U, N, M) channel state plus the AP
-# one-hot -- no g[:, ap, :] materialization, no same_cell mask input, no
-# padded operand copies. Both backends produce identical gradients to 1e-5
-# (tests/test_grad_kernels.py).
+# interference reductions through the cell-block kernels in
+# repro.kernels.noma_rates (custom_vjp: forward AND backward stream blocked
+# tiles, so the GD gradient path runs tiled at paper scale), falling back to
+# interpret mode off-TPU; 'pallas_interpret' forces interpret mode. The
+# kernels are GATHER-FREE: they consume the raw (U, N, M) channel state plus
+# the int32 AP ids -- no g[:, ap, :] materialization, no same_cell mask
+# input, no padded operand copies -- and their VMEM budget is O(BN),
+# independent of the AP count. Passing a precomputed CellLayout
+# (repro.kernels.cells.build_cell_layout, once per env) additionally
+# restricts the intra/SIC grid to same-cell block-diagonal tiles:
+# sum-of-cell-sizes^2 pairwise work instead of U^2, forward and backward.
+# Both backends produce identical gradients to 1e-5
+# (tests/test_grad_kernels.py, tests/test_cell_layout.py).
 SINR_BACKENDS = ("einsum", "pallas", "pallas_interpret")
 _SINR_BACKEND = "einsum"
 
@@ -88,8 +93,9 @@ def _cell_onehot(env: NetworkEnv) -> Array:
 
 
 def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array,
-                backend: str | None = None) -> Array:
-    """Paper eq. (5). Returns SINR (U, M)."""
+                backend: str | None = None, layout=None) -> Array:
+    """Paper eq. (5). Returns SINR (U, M). layout: optional CellLayout
+    (kernels backend only) restricting the SIC grid to same-cell tiles."""
     backend = _SINR_BACKEND if backend is None else backend
     if backend not in SINR_BACKENDS:
         raise ValueError(f"backend must be one of {SINR_BACKENDS}, got {backend!r}")
@@ -102,7 +108,7 @@ def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array,
         # so the pallas env-gradient is coherently zero rather than a silent
         # mixture. Differentiating w.r.t. gains requires backend="einsum".
         own = jax.lax.stop_gradient(own)
-        intra, inter = ops.noma_pairwise_up(env, tx,
+        intra, inter = ops.noma_pairwise_up(env, tx, layout=layout,
                                             interpret=_pallas_interpret(backend))
     else:
         cell = _cell_onehot(env)                  # (U, N)
@@ -119,17 +125,17 @@ def uplink_sinr(env: NetworkEnv, beta_up: Array, p_up: Array,
 
 
 def uplink_rates(env: NetworkEnv, beta_up: Array, p_up: Array,
-                 backend: str | None = None) -> Array:
+                 backend: str | None = None, layout=None) -> Array:
     """Paper eq. (6): per-(user, subchannel) rate in bit/s; sum over m gives
     the user's total rate under the relaxation."""
-    sinr = uplink_sinr(env, beta_up, p_up, backend=backend)
+    sinr = uplink_sinr(env, beta_up, p_up, backend=backend, layout=layout)
     bw = env.radio.bandwidth_up_hz / env.n_sub
     return beta_up * bw * jnp.log1p(sinr) / LOG2
 
 
 def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array,
-                  backend: str | None = None) -> Array:
-    """Paper eq. (8). Returns SINR (U, M)."""
+                  backend: str | None = None, layout=None) -> Array:
+    """Paper eq. (8). Returns SINR (U, M). layout as in uplink_sinr."""
     backend = _SINR_BACKEND if backend is None else backend
     if backend not in SINR_BACKENDS:
         raise ValueError(f"backend must be one of {SINR_BACKENDS}, got {backend!r}")
@@ -139,7 +145,7 @@ def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array,
         from repro.kernels import ops
         # See uplink_sinr: gains are constants under the kernel backend.
         own = jax.lax.stop_gradient(own)
-        intra, inter = ops.noma_pairwise_dn(env, tx,
+        intra, inter = ops.noma_pairwise_dn(env, tx, layout=layout,
                                             interpret=_pallas_interpret(backend))
         intra = intra * own
     else:
@@ -159,29 +165,32 @@ def downlink_sinr(env: NetworkEnv, beta_dn: Array, p_dn: Array,
 
 
 def downlink_rates(env: NetworkEnv, beta_dn: Array, p_dn: Array,
-                   backend: str | None = None) -> Array:
+                   backend: str | None = None, layout=None) -> Array:
     """Paper eq. (9)."""
-    sinr = downlink_sinr(env, beta_dn, p_dn, backend=backend)
+    sinr = downlink_sinr(env, beta_dn, p_dn, backend=backend, layout=layout)
     bw = env.radio.bandwidth_dn_hz / env.n_sub
     return beta_dn * bw * jnp.log1p(sinr) / LOG2
 
 
 def user_rates(
     env: NetworkEnv, beta_up: Array, beta_dn: Array, p_up: Array, p_dn: Array,
-    backend: str | None = None,
+    backend: str | None = None, layout=None,
 ) -> tuple[Array, Array]:
     """Total uplink/downlink rate per user (bit/s), floored for stability.
 
     Differentiable in (beta, p) under every backend: the Pallas path
-    carries a custom_vjp whose backward kernel re-streams interferer blocks
+    carries a custom_vjp whose backward kernels re-stream interferer blocks
     (see kernels/noma_rates.py), so the GD gradient path (utility ->
     user_rates) may run tiled at paper scale. Gradients w.r.t. the channel
     gains exist only under "einsum" -- the kernel backend stop_gradients
     the env (coherently zero, never a partial mixture). None resolves the
     module default at trace time; the solver passes GdConfig.sinr_backend
-    explicitly."""
-    r_up = jnp.sum(uplink_rates(env, beta_up, p_up, backend=backend), axis=-1)
-    r_dn = jnp.sum(downlink_rates(env, beta_dn, p_dn, backend=backend), axis=-1)
+    explicitly. layout: optional precomputed CellLayout for the kernel
+    backends (same-cell block-diagonal SIC grid), ignored under einsum."""
+    r_up = jnp.sum(uplink_rates(env, beta_up, p_up, backend=backend,
+                                layout=layout), axis=-1)
+    r_dn = jnp.sum(downlink_rates(env, beta_dn, p_dn, backend=backend,
+                                  layout=layout), axis=-1)
     return jnp.maximum(r_up, 1e-9), jnp.maximum(r_dn, 1e-9)
 
 

@@ -35,14 +35,17 @@ def delay_energy(
     v: GdVars,
     rates: tuple[Array, Array] | None = None,
     backend: str | None = None,
+    layout=None,
 ) -> tuple[Array, Array]:
     """Per-user (T_i, E_i): paper eqs. (12) and (17). backend selects the
-    SINR path (channel.user_rates); every choice is differentiable."""
+    SINR path (channel.user_rates); every choice is differentiable. layout
+    is the optional CellLayout forwarded to the kernel backends."""
     comp = env.comp
     f_dev, f_edge, w_up, m_dn = split_constants(prof, s)
     if rates is None:
         r_up, r_dn = channel.user_rates(env, v.beta_up, v.beta_dn, v.p_up,
-                                        v.p_dn, backend=backend)
+                                        v.p_dn, backend=backend,
+                                        layout=layout)
     else:
         r_up, r_dn = rates
     speed_edge = lam(v.r, comp) * comp.c_min_edge
@@ -68,15 +71,16 @@ def utility(
     v: GdVars,
     w: EccWeights,
     backend: str | None = None,
+    layout=None,
 ) -> Array:
     """Gamma_s = sum_i omega_T^i T_i + omega_E^i E_i  (paper eq. 22)."""
-    T, E = delay_energy(env, prof, s, v, backend=backend)
+    T, E = delay_energy(env, prof, s, v, backend=backend, layout=layout)
     return jnp.sum(w.w_T * T + w.w_E * E)
 
 
 def per_user_utility(
     env: NetworkEnv, prof: ModelProfile, s: Array, v: GdVars, w: EccWeights,
-    backend: str | None = None,
+    backend: str | None = None, layout=None,
 ) -> Array:
-    T, E = delay_energy(env, prof, s, v, backend=backend)
+    T, E = delay_energy(env, prof, s, v, backend=backend, layout=layout)
     return w.w_T * T + w.w_E * E

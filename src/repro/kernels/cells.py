@@ -1,0 +1,135 @@
+"""CellLayout: host-side AP-sort precompute for the cell-block-sparse
+NOMA kernels.
+
+The intra/SIC term only couples same-cell user pairs, so with users sorted
+by serving AP the same-cell mask is block-diagonal and the tile-driven intra
+kernel (kernels/noma_rates.py) only needs to visit the per-cell diagonal
+tiles: pairwise cost scales as sum-of-cell-sizes^2 instead of U^2, forward
+AND backward. The sort is a host-side precompute PAID ONCE PER ENV -- the
+permutation of the raw (U, N, M) channel state happens eagerly here, outside
+any traced gradient step, so the Li-GD hot loop never sees it. Per call,
+only the cheap (U, M) decision variables cross the permutation (tx[perm] in,
+out[inv] back out).
+
+Contract for engine callers:
+
+    layout = build_cell_layout(env, block_u=8, block_v=8)  # once per env
+    rates  = channel.uplink_rates(env, beta, p, backend="pallas",
+                                  layout=layout)           # every iteration
+
+The layout must be rebuilt whenever env.ap or the gains change, and when
+the kernel block sizes change (the tile lists are block-granular: they are
+built from the EFFECTIVE clamped blocks min(block, U), exactly matching the
+kernels' own clamping). ops.py validates both at call time. It is a
+registered pytree whose array leaves (sorted env, permutations, tile lists)
+flow through jit like any other operand; the tile COUNT is static metadata,
+so changing cell populations enough to change the tile list retriggers
+compilation -- the intended trade, since the grid size is what the
+sparsity buys.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Array, NetworkEnv, _register, static_field
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CellLayout:
+    """AP-sorted view of a NetworkEnv plus the block-diagonal tile lists.
+
+    env      NetworkEnv with users stably sorted by serving AP (gains and
+             ap permuted; radio/comp shared).
+    perm     (U,) int32: sorted[i] = original[perm[i]].
+    inv      (U,) int32: original[i] = sorted[inv[i]] (inverse permutation).
+    tile_u/tile_v          forward intra tile list, sorted by receiver
+                           block (tile_u non-decreasing) as the kernel's
+                           revisit-accumulate pattern requires.
+    bwd_tile_v/bwd_tile_u  the SAME tile set reordered for the backward
+                           kernel's swapped roles (tile_v non-decreasing).
+    """
+
+    env: NetworkEnv
+    perm: Array
+    inv: Array
+    tile_u: Array
+    tile_v: Array
+    bwd_tile_v: Array
+    bwd_tile_u: Array
+    n_tiles: int = static_field(default=0)
+    block_u: int = static_field(default=8)
+    block_v: int = static_field(default=8)
+
+    @property
+    def n_users(self) -> int:
+        return self.env.n_users
+
+
+def cell_tiles(ap_sorted: np.ndarray, block_u: int, block_v: int):
+    """Block-diagonal tile lists for an AP-sorted id vector.
+
+    Returns (tile_u, tile_v, bwd_tile_v, bwd_tile_u) int32 arrays: every
+    (u-block, v-block) pair that contains at least one same-cell pair,
+    each exactly once (adjacent cells sharing a boundary block would
+    otherwise duplicate tiles -- deduped here), fwd list sorted by u-block,
+    bwd list by v-block. Covers sum over cells of ceil-block products,
+    ~sum-of-cell-sizes^2 work."""
+    u = int(ap_sorted.shape[0])
+    counts = np.bincount(ap_sorted)
+    ends = np.cumsum(counts)
+    starts = ends - counts
+    tiles = set()
+    for s, e in zip(starts, ends):
+        if e <= s:
+            continue  # empty cell
+        ub = range(s // block_u, (e - 1) // block_u + 1)
+        vb = range(s // block_v, (e - 1) // block_v + 1)
+        tiles.update((i, j) for i in ub for j in vb)
+    fwd = sorted(tiles)
+    bwd = sorted(tiles, key=lambda t: (t[1], t[0]))
+    tu = np.asarray([t[0] for t in fwd], dtype=np.int32)
+    tv = np.asarray([t[1] for t in fwd], dtype=np.int32)
+    bv = np.asarray([t[1] for t in bwd], dtype=np.int32)
+    bu = np.asarray([t[0] for t in bwd], dtype=np.int32)
+    assert u == 0 or len(fwd) >= 1
+    return tu, tv, bv, bu
+
+
+def build_cell_layout(env: NetworkEnv, block_u: int = 8,
+                      block_v: int = 8) -> CellLayout:
+    """Sort users by AP and enumerate the same-cell block tiles.
+
+    One host sync (np.asarray of the (U,) ap vector) and one eager
+    permutation of the (U, N, M) gains per call -- do this once per env,
+    outside the solver loop. Block sizes are clamped to U exactly as the
+    kernels clamp them, so the tile indices always address the grid the
+    kernels actually launch."""
+    ap = np.asarray(env.ap)
+    u = ap.shape[0]
+    bu, bv = min(block_u, u), min(block_v, u)
+    perm = np.argsort(ap, kind="stable").astype(np.int32)
+    inv = np.argsort(perm).astype(np.int32)
+    ap_sorted = ap[perm]
+    tu, tv, tbv, tbu = cell_tiles(ap_sorted, bu, bv)
+    sorted_env = dataclasses.replace(
+        env,
+        g_up=jnp.asarray(env.g_up)[perm],
+        g_dn=jnp.asarray(env.g_dn)[:, perm],
+        ap=jnp.asarray(ap_sorted),
+    )
+    return CellLayout(
+        env=sorted_env,
+        perm=jnp.asarray(perm),
+        inv=jnp.asarray(inv),
+        tile_u=jnp.asarray(tu),
+        tile_v=jnp.asarray(tv),
+        bwd_tile_v=jnp.asarray(tbv),
+        bwd_tile_u=jnp.asarray(tbu),
+        n_tiles=int(tu.shape[0]),
+        block_u=bu,
+        block_v=bv,
+    )

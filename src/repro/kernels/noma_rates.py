@@ -6,49 +6,56 @@ other users (SIC intra-cell ordering + inter-cell leakage), eqs. (5)/(8).
 Naively this is a (U, V, M) tensor -- at paper scale (U=1250, M=250) that is
 390M elements per evaluation, too large to materialize in fp32 on-chip.
 
-TPU adaptation (DESIGN.md Sec. 4): tile (U, M) output blocks into VMEM and
-stream interferer blocks V as the innermost sequential grid dimension,
-accumulating in fp32 VMEM scratch. The (BU, BV, BM) mask products are VPU
-elementwise work on (8,128)-aligned tiles.
+Cell-block decomposition (the massive-connectivity layout): the two terms of
+the denominator have fundamentally different structure, so they run through
+different kernels.
 
-Gather-free layout: the kernels consume the RAW channel state -- uplink
-g_up (V, N, M), downlink g_dn (N, U, M), N = number of APs -- plus the
-per-user AP one-hot (U, N). The AP-indexed selection g_vu[v,u,m] =
-g[v, ap[u], m] that earlier revisions pre-gathered into a (V, U, M) HBM
-tensor (1.56 GB fp32 at paper scale, plus a block-padded copy) is folded
-into the kernels as a one-hot contraction over N: because same_cell[u,v] =
-<onehot[u], onehot[v]> couples the pair only through the shared AP, the
-inter-cell reduction factors through a per-AP (N, M) accumulator,
+* The INTER-cell term couples a pair (u, v) only through the shared AP, so it
+  factors exactly through a per-AP (N, M) table and never needs pairwise
+  compute:
 
-  uplink:   inter[u,m] = sum_n oh[u,n] * A[n,m],
-            A[n,m]     = sum_v (1 - oh[v,n]) * w_power[v,m] * g_up[v,n,m]
-  downlink: inter[u,m] = sum_n (1 - oh[u,n]) * g_dn[n,u,m] * B[n,m],
-            B[n,m]     = sum_v oh[v,n] * w_power[v,m]
+    uplink:   inter[u,m] = A[ap[u], m],
+              A[n,m]     = sum_v [ap[v] != n] * w_power[v,m] * g_up[v,n,m]
+    downlink: inter[u,m] = sum_n [ap[u] != n] * g_dn[n,u,m] * B[n,m],
+              B[n,m]     = sum_v [ap[v] == n] * w_power[v,m]
 
-and the same_cell mask input is gone too (derived in-kernel as
-oh_u @ oh_v^T, cheap MXU work since N is small). The SIC intra term keeps
-its pairwise form (a genuine per-pair comparison):
+  The gain-carrying reductions run as N-TILED Pallas kernels -- a blocked
+  (BN, BM) accumulator, the raw gain streamed single-pass in (BW, BN, BM)
+  blocks -- so per-block VMEM is a function of BN only, independent of the
+  total AP count N (noma_per_ap_kernel builds A and the backward cotangent
+  table D; noma_ap_contract_kernel consumes B and the backward C). The
+  gain-free tables (B, C) are plain O(U*M) segment-sums, and the final
+  row-selections A[ap] / D[ap] are O(U*M) takes of a tiny (N, M) tensor.
 
-  intra[u,m] = sum_v same[u,v] * cmp(own_v[v,m], own_u[u,m]) * w_intra[v,m]
+* The INTRA-cell SIC term is a genuine per-pair comparison,
 
-Single-pass gain traffic: a reduction whose per-AP accumulator is
-independent of the pairwise grid's parallel axis would re-stream the whole
-gain tensor once per output block if computed inside the pairwise kernel.
-Those two cases -- the uplink-forward A and the downlink-backward D =
-sum_u (1-oh[u,n]) g_dn[n,u,m] dx[u,m] -- run as a separate per-AP
-reduction kernel (noma_per_ap_kernel, grid (M, W) with W streamed) that
-reads the gain exactly once; the pairwise kernel then consumes the tiny
-(N, M) result. The remaining two cases (downlink-forward, uplink-backward)
-index the gain by the pairwise grid's own parallel axis, so each block is
-fetched exactly once there (Pallas skips refetches while the block index
-is constant along the sequential axis) and they stay fused.
+    intra[u,m] = sum_v same[u,v] * cmp(own_v[v,m], own_u[u,m]) * w_intra[v,m]
 
-Inputs arrive UNPADDED: the grid over-covers with pl.cdiv and boundary
-blocks are masked in-kernel (iota vs the true U/V extents). Out-of-bounds
+  but same[u,v] makes it BLOCK-SPARSE: only same-cell pairs contribute. The
+  intra kernel (noma_cell_intra_kernel) launches over an explicit tile list
+  (tile_r[t], tile_s[t]) held in SMEM via scalar prefetch, with every block
+  load index-mapped through the prefetched ids. With users sorted by AP
+  (kernels/cells.py CellLayout) the same-cell pairs live on the block
+  diagonal, so the list covers sum-of-cell-sizes^2 work instead of U^2 --
+  forward and backward (the backward list is the same tile set reordered so
+  the transposed output blocks are revisited consecutively). Without a
+  layout the list is simply the dense grid, which reproduces the previous
+  all-pairs schedule.
+
+AP structure enters as RAW int32 ap ids, not a (U, N) one-hot: the same-cell
+mask is an in-kernel id compare (O(1) in N), and the one-hot blocks the
+per-AP kernels need are derived from the ids against an N-block iota
+(ap_mode="iota", the profiled default -- no O(U*N) one-hot in HBM, which at
+U ~ 1e6, N ~ 1e3 would itself be GBs). ap_mode="onehot" retains the
+previous MXU-contraction layout (a streamed (BW, BN) one-hot block slice)
+for like-for-like profiling in kernel_bench.
+
+Inputs arrive UNPADDED: grids over-cover with pl.cdiv and boundary blocks
+are masked in-kernel (iota vs the true U/V/M/N extents). Out-of-bounds
 lanes of a boundary block read unspecified values (NaN in interpret mode),
-so masks are applied with jnp.where -- never by multiplication -- and
-every reduction keeps OOB garbage confined to rows/lanes the final
-(masked) output store drops.
+so masks are applied with jnp.where -- never by multiplication -- and every
+reduction keeps OOB garbage confined to rows/lanes the final (clipped)
+output store drops.
 """
 from __future__ import annotations
 
@@ -56,249 +63,377 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
 
-_DOT32 = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+AP_MODES = ("iota", "onehot")
+
+# VMEM ceiling the autotuner must respect (TPU v4/v5 have ~16 MiB/core;
+# Pallas double-buffers inputs, so kernels budget to half).
+VMEM_CEILING_BYTES = 16 * 1024 * 1024
+
+# (BU, BV, BM, BN) candidates the kernel_bench autotuner may select from.
+# Every entry must satisfy vmem_block_bytes(...) < VMEM_CEILING_BYTES for
+# both directions and both links at any n_aps (enforced by
+# tests/test_kernels.py::test_autotune_candidates_fit_vmem_ceiling); the
+# winning row is recorded in the BENCH artifact's tuning table.
+AUTOTUNE_BLOCKS = (
+    (8, 8, 128, 8),
+    (8, 8, 128, 16),
+    (16, 16, 128, 8),
+    (16, 8, 256, 8),
+    (8, 16, 128, 16),
+    (32, 32, 128, 8),
+    (8, 8, 512, 8),
+    (16, 16, 256, 16),
+)
 
 
-def _valid_rows(block_id: int, block: int, rows: int, n_valid: int):
-    """(rows, 1) bool: which rows of this block index real (unpadded) data."""
+def _valid_rows(block_id, block: int, rows: int, n_valid: int):
+    """(rows, 1) bool: which rows of this block index real (unpadded) data.
+    block_id may be a traced scalar (scalar-prefetched tile id)."""
     idx = block_id * block + jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
     return idx < n_valid
 
 
-def _intra_contrib(own_u, own_v, same, weight, valid, descending, vu_major):
-    """Masked SIC accumulation shared by all four pairwise kernel bodies.
+def _onehot_block(ap_col, ni, block_n: int, oh_ref):
+    """(BW, BN) bool AP one-hot block for N-block ni.
 
-    vu_major=False: (BU, BV, BM) layout, returns sum over v -> (BU, BM)
-      sum_v same[u,v] * cmp(own_v, own_u) * weight[v,m]   (weight: (BV, BM))
-    vu_major=True: (BV, BU, BM) layout, returns sum over u -> (BV, BM)
-      sum_u same[v,u] * cmp(own_v, own_u) * weight[u,m]   (weight: (BU, BM))
-    valid masks the streamed axis (the one being summed is the local-major
-    one in the forward pass and the streamed one in the backward pass --
-    callers pass the mask of the axis whose OOB rows must not contribute)."""
-    if vu_major:
-        cmp = own_v[:, None, :] < own_u[None, :, :] if descending else \
-              own_v[:, None, :] > own_u[None, :, :]
+    ap_mode="iota": derived from the raw ap ids against the block's global
+    n indices -- OOB n columns (boundary N block) can never match a valid
+    ap id, so the boundary mask is free. ap_mode="onehot": sliced from the
+    streamed (W, N) one-hot operand (oh_ref is the (BW, BN) block)."""
+    if oh_ref is not None:
+        return oh_ref[...] > 0.5
+    bw = ap_col.shape[0]
+    n_global = ni * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (bw, block_n), 1)
+    return ap_col == n_global
+
+
+def _cell_intra_kernel(tr_ref, ts_ref, own_r_ref, own_s_ref, w_ref,
+                       ap_r_ref, ap_s_ref, out_ref, acc_ref, *,
+                       descending: bool, n_s: int, block_s: int):
+    """Tile-driven SIC intra reduction:
+
+      out[r,m] = sum_s same[r,s] * cmp(own_s[s,m], own_r[r,m]) * w[s,m]
+
+    over the scalar-prefetched tile list (tr[t], ts[t]). The list is sorted
+    by tr, so all tiles of one output block are consecutive: the (BR, BM)
+    accumulator is zeroed at the first tile of a run and stored at the last
+    (the output block index is constant in between, so Pallas keeps the
+    buffer resident). same[r,s] is an ap-id compare -- no one-hot, no gain,
+    nothing in this kernel depends on the AP count."""
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+    rb = tr_ref[t]
+    first = (t == 0) | (tr_ref[jnp.maximum(t - 1, 0)] != rb)
+    last = (t == nt - 1) | (tr_ref[jnp.minimum(t + 1, nt - 1)] != rb)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    own_r = own_r_ref[...]           # (BR, BM)
+    own_s = own_s_ref[...]           # (BS, BM)
+    ap_r = ap_r_ref[...]             # (BR, 1) int32
+    ap_s = ap_s_ref[...]             # (BS, 1) int32
+    same = ap_r == ap_s.T            # (BR, BS)
+    valid_s = _valid_rows(ts_ref[t], block_s, ap_s.shape[0], n_s)  # (BS, 1)
+    if descending:
+        cmp = own_s[None, :, :] < own_r[:, None, :]
     else:
-        cmp = own_v[None, :, :] < own_u[:, None, :] if descending else \
-              own_v[None, :, :] > own_u[:, None, :]
-    keep = cmp & (same[:, :, None] > 0.5) & valid[None, :, :]
-    return jnp.sum(jnp.where(keep, weight[None, :, :], 0.0), axis=1)
+        cmp = own_s[None, :, :] > own_r[:, None, :]
+    keep = cmp & same[:, :, None] & valid_s[None, :, 0, None]
+    acc_ref[...] += jnp.sum(jnp.where(keep, w_ref[...][None, :, :], 0.0),
+                            axis=1)
+
+    @pl.when(last)
+    def _store():
+        out_ref[...] = acc_ref[...]
 
 
-def _per_ap_kernel(oh_ref, wgt_ref, g_ref, out_ref, acc_ref, *,
-                   uplink: bool, n_w: int, block_w: int):
-    """out[n,m] = sum_w (1 - oh[w,n]) * wgt[w,m] * g[w-major or n-major].
+def _per_ap_kernel(*refs, uplink: bool, n_w: int, block_w: int, block_n: int,
+                   onehot: bool):
+    """Other-cell per-AP reduction into a BLOCKED (BN, BM) accumulator:
 
-    The gather-free other-cell reduction: streams the raw gain exactly once
-    (grid (M, W), W innermost sequential), accumulating the (N, BM) per-AP
-    slab in VMEM scratch."""
-    wi = pl.program_id(1)
-    nw = pl.num_programs(1)
+      out[n,m] = sum_w [ap[w] != n] * wgt[w,m] * g[w or n major]
+
+    Grid (NN, NM, NW): the (BN, BM) output block accumulates while the users
+    stream; the raw gain is read in (BW, BN, BM) / (BN, BW, BM) blocks, each
+    exactly once across the grid (single-pass)."""
+    if onehot:
+        ap_ref, wgt_ref, g_ref, oh_ref, out_ref, acc_ref = refs
+    else:
+        ap_ref, wgt_ref, g_ref, out_ref, acc_ref = refs
+        oh_ref = None
+    ni = pl.program_id(0)
+    wi = pl.program_id(2)
+    nw = pl.num_programs(2)
 
     @pl.when(wi == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    oh = oh_ref[...]                 # (BW, N)
+    ap_col = ap_ref[...]             # (BW, 1)
     wgt = wgt_ref[...]               # (BW, BM)
-    valid_w = _valid_rows(wi, block_w, oh.shape[0], n_w)
-    if uplink:
-        g = g_ref[...]               # (BW, N, BM)
-        term = jnp.where(valid_w[:, :, None],
-                         (1.0 - oh)[:, :, None] * wgt[:, None, :] * g, 0.0)
+    oh = _onehot_block(ap_col, ni, block_n, oh_ref)   # (BW, BN)
+    valid_w = _valid_rows(wi, block_w, ap_col.shape[0], n_w)
+    other = (~oh) & valid_w          # (BW, BN); OOB n rows of acc are
+    if uplink:                       # clipped at the (boundary-block) store
+        g = g_ref[...]               # (BW, BN, BM)
+        term = jnp.where(other[:, :, None], wgt[:, None, :] * g, 0.0)
         acc_ref[...] += jnp.sum(term, axis=0)
     else:
-        g = g_ref[...]               # (N, BW, BM)
-        term = jnp.where(valid_w[None, :, :],
-                         (1.0 - oh.T)[:, :, None] * g * wgt[None, :, :], 0.0)
+        g = g_ref[...]               # (BN, BW, BM)
+        term = jnp.where(other.T[:, :, None], g * wgt[None, :, :], 0.0)
         acc_ref[...] += jnp.sum(term, axis=1)
 
     @pl.when(wi == nw - 1)
-    def _finish():
+    def _store():
         out_ref[...] = acc_ref[...]
 
 
-def _fwd_up_kernel(own_u_ref, own_v_ref, w_intra_ref, a_ref, oh_u_ref,
-                   oh_v_ref, intra_ref, inter_ref, acc_i_ref, *,
-                   descending: bool, n_v: int, block_v: int):
-    """Uplink forward: pairwise SIC intra + inter = oh_u @ A, with the
-    per-AP accumulator A precomputed by _per_ap_kernel (so the raw gain
-    never enters this kernel)."""
-    vi = pl.program_id(2)
-    nv = pl.num_programs(2)
+def _ap_contract_kernel(*refs, uplink: bool, n_aps: int, block_n: int,
+                        onehot: bool):
+    """Other-cell contraction of a per-AP (N, M) table against the raw gain:
 
-    @pl.when(vi == 0)
+      out[w,m] = sum_n [ap[w] != n] * g[w or n major] * nm[n,m]
+
+    Grid (NW, NM, NN): the (BW, BM) output block accumulates while the AP
+    axis streams in BN blocks; each raw-gain block is read exactly once.
+    The reduction runs over n, so OOB n lanes (boundary N block) are
+    excluded explicitly -- garbage there would contaminate valid outputs."""
+    if onehot:
+        ap_ref, nm_ref, g_ref, oh_ref, out_ref, acc_ref = refs
+    else:
+        ap_ref, nm_ref, g_ref, out_ref, acc_ref = refs
+        oh_ref = None
+    ni = pl.program_id(2)
+    nn = pl.num_programs(2)
+
+    @pl.when(ni == 0)
     def _init():
-        acc_i_ref[...] = jnp.zeros_like(acc_i_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    own_u = own_u_ref[...]           # (BU, BM)
-    own_v = own_v_ref[...]           # (BV, BM)
-    oh_u = oh_u_ref[...]             # (BU, N)
-    oh_v = oh_v_ref[...]             # (BV, N)
-    valid_v = _valid_rows(vi, block_v, own_v.shape[0], n_v)
-    same = _DOT32(oh_u, oh_v.T)      # (BU, BV)
-    acc_i_ref[...] += _intra_contrib(own_u, own_v, same, w_intra_ref[...],
-                                     valid_v, descending, vu_major=False)
+    ap_col = ap_ref[...]             # (BW, 1)
+    nm_t = nm_ref[...]               # (BN, BM)
+    oh = _onehot_block(ap_col, ni, block_n, oh_ref)
+    bw, bn = oh.shape
+    n_global = ni * block_n + jax.lax.broadcasted_iota(jnp.int32, (bw, bn), 1)
+    other = (~oh) & (n_global < n_aps)   # (BW, BN)
+    if uplink:
+        g = g_ref[...]               # (BW, BN, BM)
+        term = jnp.where(other[:, :, None], g * nm_t[None, :, :], 0.0)
+        acc_ref[...] += jnp.sum(term, axis=1)
+    else:
+        g = g_ref[...]               # (BN, BW, BM)
+        term = jnp.where(other.T[:, :, None], g * nm_t[:, None, :], 0.0)
+        acc_ref[...] += jnp.sum(term, axis=0)
 
-    @pl.when(vi == nv - 1)
-    def _finish():
-        intra_ref[...] = acc_i_ref[...]
-        inter_ref[...] = _DOT32(oh_u, a_ref[...])
-
-
-def _fwd_dn_kernel(own_u_ref, own_v_ref, w_intra_ref, w_power_ref, g_ref,
-                   oh_u_ref, oh_v_ref, intra_ref, inter_ref, acc_i_ref,
-                   acc_nm_ref, *, descending: bool, n_v: int, block_v: int):
-    """Downlink forward: pairwise SIC intra + the per-AP tx accumulator
-    B[n,m] = sum_v oh_v[v,n] w_power[v,m] (no gain involved), contracted at
-    finish against the receiver-major raw gain block -- which is indexed by
-    this kernel's own parallel (ui, mi) axes, so it is fetched once."""
-    vi = pl.program_id(2)
-    nv = pl.num_programs(2)
-
-    @pl.when(vi == 0)
-    def _init():
-        acc_i_ref[...] = jnp.zeros_like(acc_i_ref)
-        acc_nm_ref[...] = jnp.zeros_like(acc_nm_ref)
-
-    own_u = own_u_ref[...]           # (BU, BM)
-    own_v = own_v_ref[...]           # (BV, BM)
-    w_p = w_power_ref[...]           # (BV, BM)
-    oh_u = oh_u_ref[...]             # (BU, N)
-    oh_v = oh_v_ref[...]             # (BV, N)
-    valid_v = _valid_rows(vi, block_v, own_v.shape[0], n_v)
-    same = _DOT32(oh_u, oh_v.T)
-    acc_i_ref[...] += _intra_contrib(own_u, own_v, same, w_intra_ref[...],
-                                     valid_v, descending, vu_major=False)
-    term = jnp.where(valid_v[:, :, None],
-                     oh_v[:, :, None] * w_p[:, None, :], 0.0)
-    acc_nm_ref[...] += jnp.sum(term, axis=0)                # (N, BM)
-
-    @pl.when(vi == nv - 1)
-    def _finish():
-        intra_ref[...] = acc_i_ref[...]
-        g_ru = g_ref[...]                                   # (N, BU, BM)
-        inter_ref[...] = jnp.sum(
-            (1.0 - oh_u.T)[:, :, None] * g_ru * acc_nm_ref[...][:, None, :],
-            axis=0)
+    @pl.when(ni == nn - 1)
+    def _store():
+        out_ref[...] = acc_ref[...]
 
 
-def _bwd_up_kernel(own_u_ref, own_v_ref, g_ref, oh_u_ref, oh_v_ref, di_ref,
-                   dx_ref, d_wi_ref, d_wp_ref, acc_i_ref, acc_nm_ref, *,
-                   descending: bool, n_u: int, block_u: int):
-    """Uplink backward: d_wi pairwise + C[n,m] = sum_u oh_u dx (no gain),
-    contracted at finish against the interferer-major raw gain block --
-    indexed by this kernel's own parallel (vi, mi) axes, fetched once:
-
-      d_wi[v,m] = sum_u same[u,v] * cmp(own_v, own_u) * di[u,m]
-      d_wp[v,m] = sum_n (1 - oh[v,n]) * g_up[v,n,m] * C[n,m]"""
-    ui = pl.program_id(2)
-    nu = pl.num_programs(2)
-
-    @pl.when(ui == 0)
-    def _init():
-        acc_i_ref[...] = jnp.zeros_like(acc_i_ref)
-        acc_nm_ref[...] = jnp.zeros_like(acc_nm_ref)
-
-    own_u = own_u_ref[...]           # (BU, BM)
-    own_v = own_v_ref[...]           # (BV, BM)
-    oh_u = oh_u_ref[...]             # (BU, N)
-    oh_v = oh_v_ref[...]             # (BV, N)
-    dx = dx_ref[...]                 # (BU, BM)
-    valid_u = _valid_rows(ui, block_u, own_u.shape[0], n_u)
-    same_vu = _DOT32(oh_v, oh_u.T)   # (BV, BU)
-    acc_i_ref[...] += _intra_contrib(own_u, own_v, same_vu, di_ref[...],
-                                     valid_u, descending, vu_major=True)
-    term = jnp.where(valid_u[:, :, None],
-                     oh_u[:, :, None] * dx[:, None, :], 0.0)
-    acc_nm_ref[...] += jnp.sum(term, axis=0)                # (N, BM)
-
-    @pl.when(ui == nu - 1)
-    def _finish():
-        d_wi_ref[...] = acc_i_ref[...]
-        g_v = g_ref[...]                                    # (BV, N, BM)
-        d_wp_ref[...] = jnp.sum(
-            (1.0 - oh_v)[:, :, None] * g_v * acc_nm_ref[...][None, :, :],
-            axis=1)
+@functools.lru_cache(maxsize=64)
+def _dense_tiles(n_blocks_r: int, n_blocks_s: int):
+    """All (r, s) block pairs, sorted by r: the no-layout tile list (exactly
+    the previous all-pairs schedule). Shape-derived, so safe under jit."""
+    rr, ss = np.meshgrid(np.arange(n_blocks_r, dtype=np.int32),
+                         np.arange(n_blocks_s, dtype=np.int32), indexing="ij")
+    return rr.ravel(), ss.ravel()
 
 
-def _bwd_dn_kernel(own_u_ref, own_v_ref, d_acc_ref, oh_u_ref, oh_v_ref,
-                   di_ref, d_wi_ref, d_wp_ref, acc_i_ref, *,
-                   descending: bool, n_u: int, block_u: int):
-    """Downlink backward: d_wi pairwise + d_wp = oh_v @ D, with the per-AP
-    cotangent accumulator D[n,m] = sum_u (1-oh[u,n]) g_dn[n,u,m] dx[u,m]
-    precomputed by _per_ap_kernel (the raw gain never enters this kernel)."""
-    ui = pl.program_id(2)
-    nu = pl.num_programs(2)
+def noma_cell_intra_kernel(
+    own_r: jax.Array,    # (R, M) fp32 own-cell gain of the receivers
+    own_s: jax.Array,    # (S, M) own-cell gain of the streamed users
+    w_s: jax.Array,      # (S, M) per-user weight (w_intra fwd, cotangent bwd)
+    ap_r: jax.Array,     # (R,) int32 serving-AP ids
+    ap_s: jax.Array,     # (S,) int32
+    tile_r: jax.Array | None = None,   # (T,) int32 receiver block per tile
+    tile_s: jax.Array | None = None,   # (T,) int32 streamed block per tile
+    descending: bool = True,
+    block_r: int = 8,
+    block_s: int = 8,
+    block_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """SIC intra reduction over an explicit tile list, (R, M):
 
-    @pl.when(ui == 0)
-    def _init():
-        acc_i_ref[...] = jnp.zeros_like(acc_i_ref)
+      out[r,m] = sum_s [ap_r[r] == ap_s[s]] * cmp(own_s, own_r) * w_s[s,m]
 
-    own_u = own_u_ref[...]           # (BU, BM)
-    own_v = own_v_ref[...]           # (BV, BM)
-    oh_u = oh_u_ref[...]             # (BU, N)
-    oh_v = oh_v_ref[...]             # (BV, N)
-    valid_u = _valid_rows(ui, block_u, own_u.shape[0], n_u)
-    same_vu = _DOT32(oh_v, oh_u.T)
-    acc_i_ref[...] += _intra_contrib(own_u, own_v, same_vu, di_ref[...],
-                                     valid_u, descending, vu_major=True)
+    tile_r MUST be non-decreasing (output blocks are revisited while the
+    index is constant and written out when it changes) and the tile set must
+    cover every (r-block, s-block) pair containing a same-cell pair exactly
+    once -- kernels/cells.py builds such lists from a host-side sort; the
+    default is the dense grid. Scalar-prefetch machinery: the tile ids live
+    in SMEM and every VMEM block load is index-mapped through them."""
+    r, m = own_r.shape
+    s = own_s.shape[0]
+    br, bs, bm = min(block_r, r), min(block_s, s), min(block_m, m)
+    if tile_r is None or tile_s is None:
+        tr_np, ts_np = _dense_tiles(pl.cdiv(r, br), pl.cdiv(s, bs))
+        tile_r, tile_s = jnp.asarray(tr_np), jnp.asarray(ts_np)
+    nt = tile_r.shape[0]
+    nm = pl.cdiv(m, bm)
 
-    @pl.when(ui == nu - 1)
-    def _finish():
-        d_wi_ref[...] = acc_i_ref[...]
-        d_wp_ref[...] = _DOT32(oh_v_ref[...], d_acc_ref[...])
+    kernel = functools.partial(_cell_intra_kernel, descending=descending,
+                               n_s=s, block_s=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nm, nt),
+        in_specs=[
+            pl.BlockSpec((br, bm), lambda mi, t, tr, ts: (tr[t], mi)),
+            pl.BlockSpec((bs, bm), lambda mi, t, tr, ts: (ts[t], mi)),
+            pl.BlockSpec((bs, bm), lambda mi, t, tr, ts: (ts[t], mi)),
+            pl.BlockSpec((br, 1), lambda mi, t, tr, ts: (tr[t], 0)),
+            pl.BlockSpec((bs, 1), lambda mi, t, tr, ts: (ts[t], 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bm), lambda mi, t, tr, ts: (tr[t], mi)),
+        scratch_shapes=[pltpu.VMEM((br, bm), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, m), jnp.float32),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tile_r, tile_s, own_r, own_s, w_s,
+      ap_r.reshape(-1, 1), ap_s.reshape(-1, 1))
+
+
+def _ap_structure_operands(ap, n_aps: int, ap_mode: str, block_w: int,
+                           block_n: int, grid_pos: tuple):
+    """(extra operands, extra in_specs) for the AP-structure input of the
+    per-AP/contract kernels. ap_mode="onehot" streams a (W, N) one-hot
+    (built here, outside the kernel -- the PR-5 layout); "iota" needs
+    nothing beyond the ap ids."""
+    if ap_mode not in AP_MODES:
+        raise ValueError(f"ap_mode must be one of {AP_MODES}, got {ap_mode!r}")
+    if ap_mode == "iota":
+        return [], []
+    oh = jax.nn.one_hot(ap, n_aps, dtype=jnp.float32)
+    wi_pos, ni_pos = grid_pos
+    spec = pl.BlockSpec((block_w, block_n),
+                        lambda *idx: (idx[wi_pos], idx[ni_pos]))
+    return [oh], [spec]
 
 
 def noma_per_ap_kernel(
-    oh: jax.Array,       # (W, N) fp32 AP one-hot of the streamed users
+    ap: jax.Array,       # (W,) int32 serving-AP ids of the streamed users
     wgt: jax.Array,      # (W, M) per-user weight (w_power fwd, dx bwd)
     g_raw: jax.Array,    # uplink: (W, N, M) raw g_up; downlink: (N, W, M) raw g_dn
     uplink: bool = True,
     block_w: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    ap_mode: str = "iota",
     interpret: bool = False,
 ) -> jax.Array:
     """Other-cell per-AP reduction, (N, M):
 
-      out[n,m] = sum_w (1 - oh[w,n]) * wgt[w,m] * g[w,n,m]   (uplink layout)
-      out[n,m] = sum_w (1 - oh[w,n]) * wgt[w,m] * g[n,w,m]   (downlink layout)
+      out[n,m] = sum_w [ap[w] != n] * wgt[w,m] * g[w,n,m]   (uplink layout)
+      out[n,m] = sum_w [ap[w] != n] * wgt[w,m] * g[n,w,m]   (downlink layout)
 
-    Streams the raw gain exactly once -- this is the kernel that replaces
-    the (V, U, M) AP-indexed gather of earlier revisions for the two
-    reductions whose accumulator is independent of the pairwise grid's
-    parallel axis (uplink-forward A, downlink-backward D)."""
-    w, n_aps = oh.shape
+    Streams the raw gain exactly once. The accumulator is a BLOCKED
+    (BN, BM) tile on an N-tiled grid, so the per-block VMEM budget is a
+    function of BN only -- independent of the total AP count (N in the
+    thousands tiles like N=16)."""
+    w = ap.shape[0]
     m = wgt.shape[1]
-    bw, bm = min(block_w, w), min(block_m, m)
-    nwb, nm = pl.cdiv(w, bw), pl.cdiv(m, bm)
+    n_aps = g_raw.shape[1] if uplink else g_raw.shape[0]
+    bw, bm, bn = min(block_w, w), min(block_m, m), min(block_n, n_aps)
+    nwb, nm, nn = pl.cdiv(w, bw), pl.cdiv(m, bm), pl.cdiv(n_aps, bn)
 
     kernel = functools.partial(_per_ap_kernel, uplink=uplink, n_w=w,
-                               block_w=bw)
+                               block_w=bw, block_n=bn,
+                               onehot=ap_mode == "onehot")
     if uplink:
-        g_spec = pl.BlockSpec((bw, n_aps, bm), lambda mi, wi: (wi, 0, mi))
+        g_spec = pl.BlockSpec((bw, bn, bm), lambda ni, mi, wi: (wi, ni, mi))
     else:
-        g_spec = pl.BlockSpec((n_aps, bw, bm), lambda mi, wi: (0, wi, mi))
+        g_spec = pl.BlockSpec((bn, bw, bm), lambda ni, mi, wi: (ni, wi, mi))
+    extra, extra_specs = _ap_structure_operands(ap, n_aps, ap_mode, bw, bn,
+                                                grid_pos=(2, 0))
     out = pl.pallas_call(
         kernel,
-        grid=(nm, nwb),
+        grid=(nn, nm, nwb),
         in_specs=[
-            pl.BlockSpec((bw, n_aps), lambda mi, wi: (wi, 0)),      # oh
-            pl.BlockSpec((bw, bm), lambda mi, wi: (wi, mi)),        # wgt
+            pl.BlockSpec((bw, 1), lambda ni, mi, wi: (wi, 0)),      # ap
+            pl.BlockSpec((bw, bm), lambda ni, mi, wi: (wi, mi)),    # wgt
             g_spec,                                                 # g_raw
+            *extra_specs,
         ],
-        out_specs=pl.BlockSpec((n_aps, bm), lambda mi, wi: (0, mi)),
+        out_specs=pl.BlockSpec((bn, bm), lambda ni, mi, wi: (ni, mi)),
         out_shape=jax.ShapeDtypeStruct((n_aps, m), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((n_aps, bm), jnp.float32)],
-        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(oh, wgt, g_raw)
+    )(ap.reshape(-1, 1), wgt, g_raw, *extra)
     return out
+
+
+def noma_ap_contract_kernel(
+    ap: jax.Array,       # (W,) int32 serving-AP ids of the output users
+    nm_table: jax.Array,  # (N, M) per-AP table (B fwd-dn, C bwd-up)
+    g_raw: jax.Array,    # uplink: (W, N, M) raw g_up; downlink: (N, W, M) raw g_dn
+    uplink: bool = True,
+    block_w: int = 8,
+    block_m: int = 128,
+    block_n: int = 8,
+    ap_mode: str = "iota",
+    interpret: bool = False,
+) -> jax.Array:
+    """Other-cell contraction of a per-AP table against the raw gain, (W, M):
+
+      out[w,m] = sum_n [ap[w] != n] * g[w,n,m] * nm[n,m]   (uplink layout)
+      out[w,m] = sum_n [ap[w] != n] * g[n,w,m] * nm[n,m]   (downlink layout)
+
+    The dual of noma_per_ap_kernel: the AP axis streams in BN blocks while
+    the (BW, BM) output accumulates, raw gain single-pass, VMEM O(BN)."""
+    w = ap.shape[0]
+    n_aps, m = nm_table.shape
+    bw, bm, bn = min(block_w, w), min(block_m, m), min(block_n, n_aps)
+    nwb, nm, nn = pl.cdiv(w, bw), pl.cdiv(m, bm), pl.cdiv(n_aps, bn)
+
+    kernel = functools.partial(_ap_contract_kernel, uplink=uplink,
+                               n_aps=n_aps, block_n=bn,
+                               onehot=ap_mode == "onehot")
+    if uplink:
+        g_spec = pl.BlockSpec((bw, bn, bm), lambda wi, mi, ni: (wi, ni, mi))
+    else:
+        g_spec = pl.BlockSpec((bn, bw, bm), lambda wi, mi, ni: (ni, wi, mi))
+    extra, extra_specs = _ap_structure_operands(ap, n_aps, ap_mode, bw, bn,
+                                                grid_pos=(0, 2))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nwb, nm, nn),
+        in_specs=[
+            pl.BlockSpec((bw, 1), lambda wi, mi, ni: (wi, 0)),      # ap
+            pl.BlockSpec((bn, bm), lambda wi, mi, ni: (ni, mi)),    # nm_table
+            g_spec,                                                 # g_raw
+            *extra_specs,
+        ],
+        out_specs=pl.BlockSpec((bw, bm), lambda wi, mi, ni: (wi, mi)),
+        out_shape=jax.ShapeDtypeStruct((w, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw, bm), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ap.reshape(-1, 1), nm_table, g_raw, *extra)
+    return out
+
+
+def _segment_table(values: jax.Array, ap: jax.Array, n_aps: int) -> jax.Array:
+    """(N, M) per-AP segment sum: sum_w [ap[w] == n] * values[w, m]. The
+    gain-free per-AP tables (fwd-dn B, bwd-up C) -- O(U*M) scatter-add, no
+    (U, N) one-hot, no pairwise anything."""
+    return jnp.zeros((n_aps, values.shape[1]), jnp.float32).at[ap].add(
+        values.astype(jnp.float32))
 
 
 def noma_pairwise_kernel(
@@ -307,94 +442,51 @@ def noma_pairwise_kernel(
     w_intra: jax.Array,  # (V, M)
     w_power: jax.Array,  # (V, M)
     g_raw: jax.Array,    # uplink: (V, N, M) raw g_up; downlink: (N, U, M) raw g_dn
-    oh_u: jax.Array,     # (U, N) fp32 AP one-hot of the receivers
-    oh_v: jax.Array,     # (V, N) fp32 AP one-hot of the interferers
+    ap_u: jax.Array,     # (U,) int32 serving-AP ids of the receivers
+    ap_v: jax.Array,     # (V,) int32 serving-AP ids of the interferers
     descending: bool = True,
     uplink: bool = True,
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    tiles: tuple[jax.Array, jax.Array] | None = None,
+    ap_mode: str = "iota",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Gather-free pairwise reduction: returns (intra (U, M), inter (U, M)).
+    """Cell-block pairwise reduction: returns (intra (U, M), inter (U, M)).
 
-    Inputs are consumed unpadded -- boundary blocks are masked in-kernel,
-    so no _pad_to copies (and no pad ops in the jaxpr) on any operand.
-    Uplink composes the per-AP reduction kernel (gain read once) with the
-    pairwise kernel; downlink fuses both (the gain block is indexed by the
-    pairwise grid's parallel axes there, so it is fetched once anyway)."""
-    u, m = own_u.shape
-    v = own_v.shape[0]
-    n_aps = oh_u.shape[1]
-    bu, bv, bm = min(block_u, u), min(block_v, v), min(block_m, m)
-    nu, nvb, nm = pl.cdiv(u, bu), pl.cdiv(v, bv), pl.cdiv(m, bm)
-    grid = (nu, nm, nvb)
-    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
-    out_specs = [
-        pl.BlockSpec((bu, bm), lambda ui, mi, vi: (ui, mi)),
-        pl.BlockSpec((bu, bm), lambda ui, mi, vi: (ui, mi)),
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((u, m), jnp.float32),
-        jax.ShapeDtypeStruct((u, m), jnp.float32),
-    ]
-
+    intra runs through the tile-driven SIC kernel (tiles = the (tile_u,
+    tile_v) block-diagonal list from a CellLayout, or the dense grid when
+    None); inter is recovered entirely from per-AP (N, M) tables -- the
+    gain-carrying reduction N-tiled and single-pass, the rest O(U*M).
+    All inputs are consumed unpadded; boundary blocks are masked in-kernel."""
+    tile_u, tile_v = tiles if tiles is not None else (None, None)
+    intra = noma_cell_intra_kernel(
+        own_u, own_v, w_intra, ap_u, ap_v, tile_u, tile_v,
+        descending=descending, block_r=block_u, block_s=block_v,
+        block_m=block_m, interpret=interpret)
     if uplink:
-        a_nm = noma_per_ap_kernel(oh_v, w_power, g_raw, uplink=True,
-                                  block_w=bv, block_m=bm, interpret=interpret)
-        kernel = functools.partial(_fwd_up_kernel, descending=descending,
-                                   n_v=v, block_v=bv)
-        out = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bu, bm), lambda ui, mi, vi: (ui, mi)),   # own_u
-                pl.BlockSpec((bv, bm), lambda ui, mi, vi: (vi, mi)),   # own_v
-                pl.BlockSpec((bv, bm), lambda ui, mi, vi: (vi, mi)),   # w_intra
-                pl.BlockSpec((n_aps, bm), lambda ui, mi, vi: (0, mi)),  # A
-                pl.BlockSpec((bu, n_aps), lambda ui, mi, vi: (ui, 0)),  # oh_u
-                pl.BlockSpec((bv, n_aps), lambda ui, mi, vi: (vi, 0)),  # oh_v
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=[pltpu.VMEM((bu, bm), jnp.float32)],
-            compiler_params=params,
-            interpret=interpret,
-        )(own_u, own_v, w_intra, a_nm, oh_u, oh_v)
+        a_nm = noma_per_ap_kernel(ap_v, w_power, g_raw, uplink=True,
+                                  block_w=block_v, block_m=block_m,
+                                  block_n=block_n, ap_mode=ap_mode,
+                                  interpret=interpret)
+        inter = jnp.take(a_nm, ap_u, axis=0)
     else:
-        kernel = functools.partial(_fwd_dn_kernel, descending=descending,
-                                   n_v=v, block_v=bv)
-        out = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bu, bm), lambda ui, mi, vi: (ui, mi)),   # own_u
-                pl.BlockSpec((bv, bm), lambda ui, mi, vi: (vi, mi)),   # own_v
-                pl.BlockSpec((bv, bm), lambda ui, mi, vi: (vi, mi)),   # w_intra
-                pl.BlockSpec((bv, bm), lambda ui, mi, vi: (vi, mi)),   # w_power
-                pl.BlockSpec((n_aps, bu, bm),
-                             lambda ui, mi, vi: (0, ui, mi)),          # g_raw
-                pl.BlockSpec((bu, n_aps), lambda ui, mi, vi: (ui, 0)),  # oh_u
-                pl.BlockSpec((bv, n_aps), lambda ui, mi, vi: (vi, 0)),  # oh_v
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=[
-                pltpu.VMEM((bu, bm), jnp.float32),
-                pltpu.VMEM((n_aps, bm), jnp.float32),
-            ],
-            compiler_params=params,
-            interpret=interpret,
-        )(own_u, own_v, w_intra, w_power, g_raw, oh_u, oh_v)
-    return out[0], out[1]
+        b_nm = _segment_table(w_power, ap_v, g_raw.shape[0])
+        inter = noma_ap_contract_kernel(ap_u, b_nm, g_raw, uplink=False,
+                                        block_w=block_u, block_m=block_m,
+                                        block_n=block_n, ap_mode=ap_mode,
+                                        interpret=interpret)
+    return intra, inter
 
 
 def noma_pairwise_bwd_kernel(
     own_u: jax.Array,    # (U, M) fp32
     own_v: jax.Array,    # (V, M)
     g_raw: jax.Array,    # uplink: (V, N, M); downlink: (N, U, M)
-    oh_u: jax.Array,     # (U, N)
-    oh_v: jax.Array,     # (V, N)
+    ap_u: jax.Array,     # (U,) int32
+    ap_v: jax.Array,     # (V,) int32
     d_intra: jax.Array,  # (U, M) cotangent of the forward intra output
     d_inter: jax.Array,  # (U, M) cotangent of the forward inter output
     descending: bool = True,
@@ -402,133 +494,79 @@ def noma_pairwise_bwd_kernel(
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    tiles: tuple[jax.Array, jax.Array] | None = None,
+    ap_mode: str = "iota",
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """VJP of noma_pairwise_kernel w.r.t. (w_intra, w_power): (V, M) each.
 
-    Same gather-free layout and single-pass gain traffic as the forward
-    pass, with the grid transposed: (V, M) cotangent tiles accumulate while
-    receiver blocks stream sequentially, so the backward direction never
-    materializes (U, V, M) either (downlink composes the per-AP kernel on
-    d_inter; uplink fuses, its gain block being indexed by the pairwise
-    grid's parallel axes). Cotangents w.r.t. own_u/own_v are zero a.e.
-    (the SIC ordering enters through a step function, exactly as in the
-    einsum reference where the comparison is detached by .astype) and are
-    the caller's to emit; d_g is never needed because the channel gains are
-    environment constants in the GD path."""
-    u, m = own_u.shape
-    v = own_v.shape[0]
-    n_aps = oh_u.shape[1]
-    bu, bv, bm = min(block_u, u), min(block_v, v), min(block_m, m)
-    nu, nvb, nm = pl.cdiv(u, bu), pl.cdiv(v, bv), pl.cdiv(m, bm)
-    grid = (nvb, nm, nu)
-    params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
-    out_specs = [
-        pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),
-        pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((v, m), jnp.float32),
-        jax.ShapeDtypeStruct((v, m), jnp.float32),
-    ]
-
+    The intra cotangent is the SAME tile kernel with receiver/streamed roles
+    swapped and the SIC comparison flipped (sum_u same * cmp * d_intra[u]);
+    tiles here is the layout's BACKWARD list -- the identical tile set
+    reordered so tile_v is non-decreasing (dense grid transposed when None).
+    The inter cotangent mirrors the forward factorization with the per-AP
+    roles swapped: uplink contracts C[n,m] = sum_u [ap[u]==n] d_inter[u,m]
+    against the raw gain (N-tiled, single-pass); downlink takes rows of the
+    per-AP cotangent table D[n,m] = sum_u [ap[u]!=n] g_dn[n,u,m] d_inter.
+    Cotangents w.r.t. own_u/own_v are zero a.e. (the SIC ordering enters
+    through a step function, exactly as in the einsum reference where the
+    comparison is detached) and are the caller's to emit; d_g is never
+    needed because the channel gains are environment constants in the GD
+    path."""
+    tile_v_b, tile_u_b = tiles if tiles is not None else (None, None)
+    d_wi = noma_cell_intra_kernel(
+        own_v, own_u, d_intra, ap_v, ap_u, tile_v_b, tile_u_b,
+        descending=not descending, block_r=block_v, block_s=block_u,
+        block_m=block_m, interpret=interpret)
     if uplink:
-        kernel = functools.partial(_bwd_up_kernel, descending=descending,
-                                   n_u=u, block_u=bu)
-        out = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),   # own_u
-                pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),   # own_v
-                pl.BlockSpec((bv, n_aps, bm),
-                             lambda vi, mi, ui: (vi, 0, mi)),          # g_raw
-                pl.BlockSpec((bu, n_aps), lambda vi, mi, ui: (ui, 0)),  # oh_u
-                pl.BlockSpec((bv, n_aps), lambda vi, mi, ui: (vi, 0)),  # oh_v
-                pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),   # d_intra
-                pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),   # d_inter
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=[
-                pltpu.VMEM((bv, bm), jnp.float32),
-                pltpu.VMEM((n_aps, bm), jnp.float32),
-            ],
-            compiler_params=params,
-            interpret=interpret,
-        )(own_u, own_v, g_raw, oh_u, oh_v, d_intra, d_inter)
+        c_nm = _segment_table(d_inter, ap_u, g_raw.shape[1])
+        d_wp = noma_ap_contract_kernel(ap_v, c_nm, g_raw, uplink=True,
+                                       block_w=block_v, block_m=block_m,
+                                       block_n=block_n, ap_mode=ap_mode,
+                                       interpret=interpret)
     else:
-        d_nm = noma_per_ap_kernel(oh_u, d_inter, g_raw, uplink=False,
-                                  block_w=bu, block_m=bm, interpret=interpret)
-        kernel = functools.partial(_bwd_dn_kernel, descending=descending,
-                                   n_u=u, block_u=bu)
-        out = pl.pallas_call(
-            kernel,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),   # own_u
-                pl.BlockSpec((bv, bm), lambda vi, mi, ui: (vi, mi)),   # own_v
-                pl.BlockSpec((n_aps, bm), lambda vi, mi, ui: (0, mi)),  # D
-                pl.BlockSpec((bu, n_aps), lambda vi, mi, ui: (ui, 0)),  # oh_u
-                pl.BlockSpec((bv, n_aps), lambda vi, mi, ui: (vi, 0)),  # oh_v
-                pl.BlockSpec((bu, bm), lambda vi, mi, ui: (ui, mi)),   # d_intra
-            ],
-            out_specs=out_specs,
-            out_shape=out_shape,
-            scratch_shapes=[pltpu.VMEM((bv, bm), jnp.float32)],
-            compiler_params=params,
-            interpret=interpret,
-        )(own_u, own_v, d_nm, oh_u, oh_v, d_intra)
-    return out[0], out[1]
+        d_nm = noma_per_ap_kernel(ap_u, d_inter, g_raw, uplink=False,
+                                  block_w=block_u, block_m=block_m,
+                                  block_n=block_n, ap_mode=ap_mode,
+                                  interpret=interpret)
+        d_wp = jnp.take(d_nm, ap_v, axis=0)
+    return d_wi, d_wp
 
 
 def vmem_block_bytes(block_u: int = 8, block_v: int = 8, block_m: int = 128,
-                     n_aps: int = 4, direction: str = "fwd",
+                     block_n: int = 8, n_aps: int = 4, direction: str = "fwd",
                      uplink: bool = True) -> int:
     """Analytic fp32 VMEM working set of one kernel block (inputs + scratch
     + outputs), reported as the MAX over the Pallas kernels a direction
-    launches (the uplink forward and downlink backward compose the per-AP
-    reduction kernel with the pairwise kernel; the other two directions
-    are a single fused kernel). The raw-gain block -- (BW, N, BM) or
-    (N, BW, BM) -- makes the budget LINEAR in the AP count N: ~4 KiB per
-    AP at the deployed (8, 8, 128) tiles, bounding N at a few thousand
-    before a block alone approaches the ~16 MB VMEM ceiling (the paper's
-    multi-cell regimes use N <= ~100). The fused directions (downlink fwd,
-    uplink bwd) carry the gain inside the pairwise kernel; the composed
-    directions split it into two smaller kernels, so their max is below
-    the fused budget up to moderate N (at very large N the per-AP kernel's
-    2x (N, BM) out+scratch edges marginally past the fused figure)."""
-    bu, bv, bm, n = block_u, block_v, block_m, n_aps
+    launches: the tile-driven intra kernel plus one N-tiled gain kernel
+    (per-AP for uplink-fwd/downlink-bwd, contract for downlink-fwd/
+    uplink-bwd). Every term is a function of the BLOCK sizes only: the raw
+    gain enters as a (BW, BN, BM) block and the accumulators are (BN, BM) /
+    (BW, BM), so the budget is INDEPENDENT of the total AP count N (n_aps
+    only clamps BN, exactly as the kernels do) -- N=4096 tiles under the
+    same budget as N=16. The previous layout's ~4 KiB/AP linear term is
+    gone; the tile lists themselves live in SMEM, not VMEM."""
+    bm, bn = block_m, min(block_n, n_aps)
+
+    def intra(br, bs):
+        # own_r + out + acc (BR, BM); own_s + w (BS, BM); ap ids (BR/BS, 1)
+        return 3 * br * bm + 2 * bs * bm + br + bs
 
     def per_ap(bw):
-        # oh (BW, N) + wgt (BW, BM) + gain (BW*N*BM either layout) +
-        # out + scratch (N, BM)
-        return bw * n + bw * bm + bw * n * bm + 2 * n * bm
+        # ap (BW, 1) + wgt (BW, BM) + gain (BW, BN, BM) + out/acc (BN, BM)
+        return bw + bw * bm + bw * bn * bm + 2 * bn * bm
+
+    def contract(bw):
+        # ap (BW, 1) + table (BN, BM) + gain (BW, BN, BM) + out/acc (BW, BM)
+        return bw + bn * bm + bw * bn * bm + 2 * bw * bm
 
     if direction == "fwd":
-        if uplink:
-            # pairwise: own_u, acc_i, 2x out (BU, BM); own_v, w_intra
-            # (BV, BM); A (N, BM); one-hots
-            pairwise = (4 * bu * bm + 2 * bv * bm + n * bm
-                        + n * (bu + bv))
-            words = max(per_ap(bv), pairwise)
-        else:
-            # fused: own_u, acc_i, 2x out; own_v, w_intra, w_power; gain
-            # (N, BU, BM); acc_nm; one-hots
-            words = (4 * bu * bm + 3 * bv * bm + n * bu * bm + n * bm
-                     + n * (bu + bv))
+        words = max(intra(block_u, block_v),
+                    per_ap(block_v) if uplink else contract(block_u))
     elif direction == "bwd":
-        if uplink:
-            # fused: own_u, d_intra, d_inter; own_v, acc_i, 2x out; gain
-            # (BV, N, BM); acc_nm; one-hots
-            words = (3 * bu * bm + 4 * bv * bm + bv * n * bm + n * bm
-                     + n * (bu + bv))
-        else:
-            # pairwise: own_u, d_intra (BU, BM); own_v, acc_i, 2x out
-            # (BV, BM); D (N, BM); one-hots
-            pairwise = (2 * bu * bm + 4 * bv * bm + n * bm
-                        + n * (bu + bv))
-            words = max(per_ap(bu), pairwise)
+        words = max(intra(block_v, block_u),
+                    contract(block_v) if uplink else per_ap(block_u))
     else:
         raise ValueError(f"direction must be 'fwd' or 'bwd', got {direction!r}")
     return 4 * words

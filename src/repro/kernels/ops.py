@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.cells import CellLayout
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.noma_rates import noma_pairwise_bwd_kernel, noma_pairwise_kernel
 from repro.kernels.rg_lru import rg_lru_kernel
@@ -60,34 +61,55 @@ def flash_attention(
     return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
 
 
-def _noma_pairwise(own, w_intra, w_power, g_raw, oh, uplink, descending,
-                   interpret, block_u, block_v, block_m):
-    """Run the gather-free forward kernel on the UNPADDED operands.
+def _layout_blocks(layout, env, block_u, block_v):
+    """Resolve the intra block sizes. The tile lists are block-granular and
+    tied to one env, so when a CellLayout is supplied ITS blocks are
+    authoritative (they were fixed at build_cell_layout time) and override
+    the arguments -- channel-layer callers thread layout= without having to
+    re-thread matching block sizes. A layout built for a different user
+    count is a silent-wrong-answer bug and is refused."""
+    if layout is None:
+        return block_u, block_v
+    if layout.n_users != env.n_users:
+        raise ValueError(
+            f"CellLayout built for U={layout.n_users}, env has "
+            f"U={env.n_users}; rebuild with build_cell_layout(env, ...).")
+    return layout.block_u, layout.block_v
+
+
+def _noma_pairwise(own, w_intra, w_power, g_raw, ap, uplink, descending,
+                   interpret, block_u, block_v, block_m, block_n, tiles,
+                   ap_mode):
+    """Run the cell-block forward kernel on the UNPADDED operands.
 
     The kernel masks boundary blocks in-kernel (clamped cdiv grid), so no
     _pad_to copies -- and no pad ops in the jaxpr -- on any operand; the
     receiver (U) and interferer (V) axes still tile independently
-    (block_u vs block_v)."""
+    (block_u vs block_v), and the AP axis tiles in block_n. tiles is the
+    layout's block-diagonal intra list (dense grid when None)."""
     return noma_pairwise_kernel(
-        own, own, w_intra, w_power, g_raw, oh, oh,
+        own, own, w_intra, w_power, g_raw, ap, ap,
         descending=descending, uplink=uplink,
-        block_u=block_u, block_v=block_v, block_m=block_m,
-        interpret=interpret,
+        block_u=block_u, block_v=block_v, block_m=block_m, block_n=block_n,
+        tiles=tiles, ap_mode=ap_mode, interpret=interpret,
     )
 
 
-def _noma_pairwise_bwd(own, g_raw, oh, d_intra, d_inter, uplink, descending,
-                       interpret, block_u, block_v, block_m):
-    """Backward twin of _noma_pairwise: the transposed-streaming kernel on
+def _noma_pairwise_bwd(own, g_raw, ap, d_intra, d_inter, uplink, descending,
+                       interpret, block_u, block_v, block_m, block_n, tiles,
+                       ap_mode):
+    """Backward twin of _noma_pairwise: the transposed-streaming kernels on
     the same unpadded raw-gain operands; returns (V, M) weight cotangents.
-    Receiver boundary blocks are masked in-kernel (the cotangents arrive
-    unpadded, so garbage OOB lanes must not contribute)."""
+    tiles is the layout's BACKWARD list (the same tile set reordered for the
+    swapped receiver/streamed roles); boundary blocks are masked in-kernel
+    (the cotangents arrive unpadded, so garbage OOB lanes must not
+    contribute)."""
     d_wi, d_wp = noma_pairwise_bwd_kernel(
-        own, own, g_raw, oh, oh,
+        own, own, g_raw, ap, ap,
         d_intra.astype(jnp.float32), d_inter.astype(jnp.float32),
         descending=descending, uplink=uplink,
-        block_u=block_u, block_v=block_v, block_m=block_m,
-        interpret=interpret,
+        block_u=block_u, block_v=block_v, block_m=block_m, block_n=block_n,
+        tiles=tiles, ap_mode=ap_mode, interpret=interpret,
     )
     return d_wi, d_wp
 
@@ -103,21 +125,22 @@ def _zeros_cot(tree):
     return jax.tree.map(z, tree)
 
 
-def _ap_onehot(env: NetworkEnv):
-    """(U, N) fp32 serving-AP one-hot: the only pairwise-structure input the
-    gather-free kernels need (same_cell and the AP-indexed gain selection
-    are both derived from it in-kernel)."""
-    return jax.nn.one_hot(env.ap, env.n_aps, dtype=jnp.float32)
+def _used_env(env: NetworkEnv, layout: CellLayout | None) -> NetworkEnv:
+    """The environment the kernels actually consume: the layout's AP-sorted
+    copy when a CellLayout is supplied, the caller's env otherwise. The big
+    gain permutation was paid eagerly at build_cell_layout time -- nothing
+    here gathers a 3D tensor inside the traced step."""
+    return env if layout is None else layout.env
 
 
 def _up_inputs(env: NetworkEnv):
-    """The uplink kernel inputs derived from the environment (all constants
-    of the GD path): own-AP gains, the RAW (V, N, M) uplink gains -- no
-    g_up[:, ap, :] gather, the AP selection happens in-kernel -- and the
-    AP one-hot."""
+    """The uplink kernel inputs derived from the (used) environment, all
+    constants of the GD path: own-AP gains, the RAW (V, N, M) uplink gains
+    -- no g_up[:, ap, :] gather, the AP selection is an in-kernel id
+    compare -- and the raw int32 ap ids."""
     own = env.own_gain_up().astype(jnp.float32)
     g_raw = env.g_up.astype(jnp.float32)
-    return own, g_raw, _ap_onehot(env)
+    return own, g_raw, env.ap
 
 
 def _dn_inputs(env: NetworkEnv):
@@ -125,58 +148,98 @@ def _dn_inputs(env: NetworkEnv):
     receiver-major (no g_dn[ap, :, :] gather, no transpose copy)."""
     own = env.own_gain_dn().astype(jnp.float32)
     g_raw = env.g_dn.astype(jnp.float32)
-    return own, g_raw, _ap_onehot(env)
+    return own, g_raw, env.ap
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _pairwise_up(env, tx, interpret, block_u, block_v, block_m):
-    return _pairwise_up_fwd(env, tx, interpret, block_u, block_v, block_m)[0]
+def _sort_in(x, layout):
+    """(U, M) decision variables into the layout's sorted user order -- the
+    only per-call cost of the cell-block schedule (a 2D row take)."""
+    return x if layout is None else jnp.take(x, layout.perm, axis=0)
 
 
-def _pairwise_up_fwd(env, tx, interpret, block_u, block_v, block_m):
-    own, g_raw, oh = _up_inputs(env)
-    tx = tx.astype(jnp.float32)
-    out = _noma_pairwise(own, tx * own, tx, g_raw, oh, True, True,
-                         interpret, block_u, block_v, block_m)
+def _sort_out(x, layout):
+    """Kernel outputs back to the caller's original user order."""
+    return x if layout is None else jnp.take(x, layout.inv, axis=0)
+
+
+def _fwd_tiles(layout):
+    return None if layout is None else (layout.tile_u, layout.tile_v)
+
+
+def _bwd_tiles(layout):
+    return None if layout is None else (layout.bwd_tile_v, layout.bwd_tile_u)
+
+
+_PAIR_NONDIFF = (3, 4, 5, 6, 7, 8)   # interpret + block sizes + ap_mode
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=_PAIR_NONDIFF)
+def _pairwise_up(env, tx, layout, interpret, block_u, block_v, block_m,
+                 block_n, ap_mode):
+    return _pairwise_up_fwd(env, tx, layout, interpret, block_u, block_v,
+                            block_m, block_n, ap_mode)[0]
+
+
+def _pairwise_up_fwd(env, tx, layout, interpret, block_u, block_v, block_m,
+                     block_n, ap_mode):
+    own, g_raw, ap = _up_inputs(_used_env(env, layout))
+    tx = _sort_in(tx.astype(jnp.float32), layout)
+    out = _noma_pairwise(own, tx * own, tx, g_raw, ap, True, True,
+                         interpret, block_u, block_v, block_m, block_n,
+                         _fwd_tiles(layout), ap_mode)
     # Residuals are exactly the kernel inputs -- no pairwise intermediates
-    # are saved (g_raw aliases env.g_up, so the residual adds only the
-    # O(U*M) own gains and the O(U*N) one-hot); the backward kernel
-    # re-streams the same raw blocks.
-    return out, (env, own, g_raw, oh)
+    # are saved (own/g_raw/ap re-derive from env or layout.env, so the
+    # residual adds only the O(U*M) own gains); the backward kernels
+    # re-stream the same raw blocks through the same tile lists.
+    return tuple(_sort_out(o, layout) for o in out), (env, layout, own)
 
 
-def _pairwise_up_bwd(interpret, block_u, block_v, block_m, res, ct):
-    env, own, g_raw, oh = res
-    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, oh, ct[0], ct[1], True, True,
-                                    interpret, block_u, block_v, block_m)
+def _pairwise_up_bwd(interpret, block_u, block_v, block_m, block_n, ap_mode,
+                     res, ct):
+    env, layout, own = res
+    _, g_raw, ap = _up_inputs(_used_env(env, layout))
+    d_i, d_x = (_sort_in(c, layout) for c in ct)
+    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, ap, d_i, d_x, True, True,
+                                    interpret, block_u, block_v, block_m,
+                                    block_n, _bwd_tiles(layout), ap_mode)
     # Forward fed the kernel w_intra = tx * own and w_power = tx; chain back
-    # to the one differentiable input. env carries only GD-path constants.
-    return _zeros_cot(env), d_wi * own + d_wp
+    # to the one differentiable input. env and layout carry only GD-path
+    # constants (zero cotangents, float0 for the int permutations/tiles).
+    d_tx = _sort_out(d_wi * own + d_wp, layout)
+    return _zeros_cot(env), d_tx, _zeros_cot(layout)
 
 
 _pairwise_up.defvjp(_pairwise_up_fwd, _pairwise_up_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _pairwise_dn(env, tx, interpret, block_u, block_v, block_m):
-    return _pairwise_dn_fwd(env, tx, interpret, block_u, block_v, block_m)[0]
+@functools.partial(jax.custom_vjp, nondiff_argnums=_PAIR_NONDIFF)
+def _pairwise_dn(env, tx, layout, interpret, block_u, block_v, block_m,
+                 block_n, ap_mode):
+    return _pairwise_dn_fwd(env, tx, layout, interpret, block_u, block_v,
+                            block_m, block_n, ap_mode)[0]
 
 
-def _pairwise_dn_fwd(env, tx, interpret, block_u, block_v, block_m):
-    own, g_raw, oh = _dn_inputs(env)
-    tx = tx.astype(jnp.float32)
-    out = _noma_pairwise(own, tx, tx, g_raw, oh, False, False,
-                         interpret, block_u, block_v, block_m)
-    return out, (env, own, g_raw, oh)
+def _pairwise_dn_fwd(env, tx, layout, interpret, block_u, block_v, block_m,
+                     block_n, ap_mode):
+    own, g_raw, ap = _dn_inputs(_used_env(env, layout))
+    tx = _sort_in(tx.astype(jnp.float32), layout)
+    out = _noma_pairwise(own, tx, tx, g_raw, ap, False, False,
+                         interpret, block_u, block_v, block_m, block_n,
+                         _fwd_tiles(layout), ap_mode)
+    return tuple(_sort_out(o, layout) for o in out), (env, layout, own)
 
 
-def _pairwise_dn_bwd(interpret, block_u, block_v, block_m, res, ct):
-    env, own, g_raw, oh = res
-    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, oh, ct[0], ct[1], False, False,
-                                    interpret, block_u, block_v, block_m)
+def _pairwise_dn_bwd(interpret, block_u, block_v, block_m, block_n, ap_mode,
+                     res, ct):
+    env, layout, own = res
+    _, g_raw, ap = _dn_inputs(_used_env(env, layout))
+    d_i, d_x = (_sort_in(c, layout) for c in ct)
+    d_wi, d_wp = _noma_pairwise_bwd(own, g_raw, ap, d_i, d_x, False, False,
+                                    interpret, block_u, block_v, block_m,
+                                    block_n, _bwd_tiles(layout), ap_mode)
     # Downlink feeds tx into both weight slots (the receiver-side own-gain
     # factor of eq. 8 is applied by the caller, outside the kernel).
-    return _zeros_cot(env), d_wi + d_wp
+    return _zeros_cot(env), _sort_out(d_wi + d_wp, layout), _zeros_cot(layout)
 
 
 _pairwise_dn.defvjp(_pairwise_dn_fwd, _pairwise_dn_bwd)
@@ -189,19 +252,28 @@ def noma_pairwise_up(
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    layout: CellLayout | None = None,
+    ap_mode: str = "iota",
 ) -> tuple[jax.Array, jax.Array]:
     """Uplink (intra, inter) interference terms of eq. (5) via the Pallas
-    kernel: the exact denominators consumed by channel.uplink_sinr.
+    kernels: the exact denominators consumed by channel.uplink_sinr.
 
-    Differentiable in tx (jax.custom_vjp): the backward pass is the
-    transposed-streaming kernel in noma_rates.py, so the GD gradient path
-    never materializes (U, V, M) in either direction.
+    Differentiable in tx (jax.custom_vjp): the backward pass re-streams the
+    same cell-block kernels in noma_rates.py, so the GD gradient path never
+    materializes (U, V, M) in either direction. With a CellLayout
+    (kernels/cells.py, built once per env) the intra grid covers only the
+    same-cell block-diagonal tiles -- sum-of-cell-sizes^2 work, not U^2 --
+    and tx/outputs cross the sort as cheap (U, M) row takes; results are
+    returned in the caller's original user order either way.
 
     Deliberately NOT jitted: the hot callers (channel.uplink_sinr inside
     gd_solve / the engine's compiled programs) are already inside jit, and
     a nested jit only adds a closed-call trace layer. Direct eager callers
     should use noma_pairwise_up_jit."""
-    return _pairwise_up(env, tx, interpret, block_u, block_v, block_m)
+    block_u, block_v = _layout_blocks(layout, env, block_u, block_v)
+    return _pairwise_up(env, tx, layout, interpret, block_u, block_v,
+                        block_m, block_n, ap_mode)
 
 
 def noma_pairwise_dn(
@@ -211,13 +283,19 @@ def noma_pairwise_dn(
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    layout: CellLayout | None = None,
+    ap_mode: str = "iota",
 ) -> tuple[jax.Array, jax.Array]:
     """Downlink (intra, inter) terms of eq. (8). The returned intra term is
     sum_v stronger*same * tx[v]; the caller multiplies by own-gain (the
     receiver-side factor in eq. 8), matching channel.downlink_sinr.
-    Differentiable in tx via the same custom_vjp discipline as the uplink.
-    Unjitted for in-jit composition; see noma_pairwise_up."""
-    return _pairwise_dn(env, tx, interpret, block_u, block_v, block_m)
+    Differentiable in tx via the same custom_vjp discipline as the uplink,
+    with the same CellLayout contract. Unjitted for in-jit composition; see
+    noma_pairwise_up."""
+    block_u, block_v = _layout_blocks(layout, env, block_u, block_v)
+    return _pairwise_dn(env, tx, layout, interpret, block_u, block_v,
+                        block_m, block_n, ap_mode)
 
 
 def noma_uplink_rates(
@@ -228,6 +306,9 @@ def noma_uplink_rates(
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    layout: CellLayout | None = None,
+    ap_mode: str = "iota",
 ) -> jax.Array:
     """Kernel-backed replacement for repro.core.channel.uplink_rates.
 
@@ -239,7 +320,8 @@ def noma_uplink_rates(
     tx = beta_up * p_up[:, None]
     intra, inter = noma_pairwise_up(env, tx, interpret=interpret,
                                     block_u=block_u, block_v=block_v,
-                                    block_m=block_m)
+                                    block_m=block_m, block_n=block_n,
+                                    layout=layout, ap_mode=ap_mode)
     sinr = p_up[:, None] * own / (intra + inter + env.noise_up)
     bw = env.radio.bandwidth_up_hz / env.n_sub
     return beta_up * bw * jnp.log1p(sinr) / LOG2
@@ -253,6 +335,9 @@ def noma_downlink_rates(
     block_u: int = 8,
     block_v: int = 8,
     block_m: int = 128,
+    block_n: int = 8,
+    layout: CellLayout | None = None,
+    ap_mode: str = "iota",
 ) -> jax.Array:
     """Kernel-backed replacement for repro.core.channel.downlink_rates:
     assembles eq. (8)'s SINR from the pairwise terms (the intra term carries
@@ -263,7 +348,8 @@ def noma_downlink_rates(
     tx = beta_dn * p_dn[:, None]
     intra, inter = noma_pairwise_dn(env, tx, interpret=interpret,
                                     block_u=block_u, block_v=block_v,
-                                    block_m=block_m)
+                                    block_m=block_m, block_n=block_n,
+                                    layout=layout, ap_mode=ap_mode)
     sinr = p_dn[:, None] * own / (intra * own + inter + env.noise_dn)
     bw = env.radio.bandwidth_dn_hz / env.n_sub
     return beta_dn * bw * jnp.log1p(sinr) / LOG2
@@ -272,8 +358,11 @@ def noma_downlink_rates(
 # Jitted entry points for direct (eager) callers -- benchmarks, notebooks,
 # launch scripts. The unjitted functions above remain the composable core:
 # re-entering jit from an already-jitted gd_solve/engine program was pure
-# trace overhead.
-_NOMA_STATIC = ("interpret", "block_u", "block_v", "block_m")
+# trace overhead. layout stays an operand (its tile lists are array leaves;
+# the tile COUNT is pytree metadata, so a different cell population
+# recompiles -- by design, the grid size is the point).
+_NOMA_STATIC = ("interpret", "block_u", "block_v", "block_m", "block_n",
+                "ap_mode")
 noma_pairwise_up_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(
     noma_pairwise_up)
 noma_pairwise_dn_jit = functools.partial(jax.jit, static_argnames=_NOMA_STATIC)(

@@ -90,6 +90,44 @@ def noma_pairwise_gather_free_ref(own_u, own_v, w_intra, w_power, g_raw, ap,
     return intra, inter
 
 
+def noma_cell_block_ref(own_u, own_v, w_intra, w_power, g_raw, ap,
+                        tile_u, tile_v, block_u: int, block_v: int,
+                        descending: bool, uplink: bool):
+    """Oracle for the CELL-BLOCK schedule (kernels/noma_rates.py +
+    kernels/cells.py): the intra/SIC term is accumulated ONLY over the
+    given (tile_u, tile_v) block list -- exactly the tiles the Pallas grid
+    launches -- so comparing against noma_pairwise_gather_free_ref proves
+    the block-diagonal list covers every same-cell pair (and, double-count
+    free, each exactly once). The inter term is the factored per-AP form,
+    never pairwise. Inputs are in the SORTED user domain when the tile list
+    came from a CellLayout.
+
+    ap: (U,) int32 (U == V); tile_u/tile_v: (T,) int block indices.
+    """
+    import numpy as np
+
+    u, m = own_u.shape
+    v = own_v.shape[0]
+    intra = jnp.zeros((u, m), jnp.float32)
+    same_full = ap[:, None] == ap[None, :]
+    if descending:
+        cmp_full = own_v[None, :, :] < own_u[:, None, :]
+    else:
+        cmp_full = own_v[None, :, :] > own_u[:, None, :]
+    for ub, vb in zip(np.asarray(tile_u), np.asarray(tile_v)):
+        r0, r1 = ub * block_u, min((ub + 1) * block_u, u)
+        s0, s1 = vb * block_v, min((vb + 1) * block_v, v)
+        keep = (cmp_full[r0:r1, s0:s1, :]
+                & same_full[r0:r1, s0:s1, None])
+        contrib = jnp.sum(
+            jnp.where(keep, w_intra[None, s0:s1, :], 0.0), axis=1)
+        intra = intra.at[r0:r1].add(contrib)
+    _, inter = noma_pairwise_gather_free_ref(
+        own_u, own_v, w_intra, w_power, g_raw, ap,
+        descending=descending, uplink=uplink)
+    return intra, inter
+
+
 def rg_lru_ref(log_a, b, h0=None):
     """h_t = exp(log_a_t) * h_{t-1} + b_t, via associative scan.
     log_a, b: (B, S, W) fp32."""

@@ -1,0 +1,262 @@
+"""CellLayout (kernels/cells.py): the AP-sorted cell-block schedule.
+
+Permutation invariance -- rates and gradients computed through the sorted
+layout must match the UNSORTED einsum oracle after the inverse permutation
+(which the ops wrappers apply internally) -- plus the structural claims:
+the intra grid launches only the block-diagonal tiles (sum-of-cell-sizes^2,
+proven from the lowered jaxpr's grid shapes, not trusted from the tile
+count), and the tile lists are exactly the same-cell coverage (block-sparse
+oracle)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, make_env
+from repro.kernels import build_cell_layout, ops, ref
+from repro.kernels.cells import cell_tiles
+
+
+def _case(u, n, m, seed=0, ap=None):
+    env = make_env(jax.random.PRNGKey(seed), n_users=u, n_aps=n, n_sub=m)
+    if ap is not None:
+        env = dataclasses.replace(env, ap=jnp.asarray(ap, jnp.int32))
+    beta = jax.random.dirichlet(jax.random.PRNGKey(seed + 1), jnp.ones(m), (u,))
+    p_up = jax.random.uniform(jax.random.PRNGKey(seed + 2), (u,),
+                              minval=0.01, maxval=0.3)
+    p_dn = jax.random.uniform(jax.random.PRNGKey(seed + 3), (u,),
+                              minval=0.1, maxval=10.0)
+    return env, beta, p_up, p_dn
+
+
+def _close(got, want, tol=1e-5):
+    got, want = np.asarray(got), np.asarray(want)
+    np.testing.assert_allclose(got, want, rtol=tol,
+                               atol=tol * max(np.abs(want).max(), 1e-30))
+
+
+def _skews(u, n):
+    """AP assignments with skewed cell populations: natural (nearest-AP),
+    one giant cell + many empty cells, and all-one-cell (N=1 behavior on
+    an N-cell env)."""
+    giant = np.zeros(u, np.int32)
+    giant[:: max(u // 3, 1)] = n - 1          # a few users elsewhere
+    return {"natural": None, "giant": giant,
+            "one_cell": np.full(u, n // 2, np.int32)}
+
+
+@pytest.mark.parametrize("u,n,m", [(20, 3, 6), (13, 5, 7), (9, 1, 12)])
+@pytest.mark.parametrize("skew", ["natural", "giant", "one_cell"])
+@pytest.mark.parametrize("link", ["up", "dn"])
+def test_layout_rates_and_grads_match_unsorted_einsum(u, n, m, skew, link):
+    """THE permutation-invariance contract: both links, both SIC orders
+    (uplink decodes descending, downlink ascending -- the link choice
+    exercises both), skewed cell populations including one giant cell with
+    empty cells and N=1. Rates AND gradients at 1e-5 against the unsorted
+    einsum oracle."""
+    env, beta, p_up, p_dn = _case(u, n, m, seed=u + n,
+                                  ap=_skews(u, n)[skew])
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    fn = channel.uplink_rates if link == "up" else channel.downlink_rates
+    p = p_up if link == "up" else p_dn
+
+    _close(fn(env, beta, p, backend="pallas_interpret", layout=layout),
+           fn(env, beta, p, backend="einsum"))
+    ge = jax.grad(lambda b, q: jnp.sum(fn(env, b, q, backend="einsum")),
+                  argnums=(0, 1))(beta, p)
+    gl = jax.grad(lambda b, q: jnp.sum(
+        fn(env, b, q, backend="pallas_interpret", layout=layout)),
+        argnums=(0, 1))(beta, p)
+    for want, got in zip(jax.tree.leaves(ge), jax.tree.leaves(gl)):
+        _close(got, want)
+
+
+@pytest.mark.parametrize("descending", [True, False])
+@pytest.mark.parametrize("uplink", [True, False])
+def test_layout_pairwise_both_sic_orders(descending, uplink):
+    """Kernel-level permutation invariance for BOTH SIC orders on BOTH
+    links (the channel layer only ever pairs descending-with-uplink; the
+    kernels support the full matrix): sorted-domain kernels + inverse
+    permutation == unsorted gather-free reference."""
+    u, n, m = 14, 4, 6
+    env, beta, p_up, _ = _case(u, n, m, seed=5)
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    tx = (beta * p_up[:, None]).astype(jnp.float32)
+    senv = layout.env
+    own_s = (senv.own_gain_up() if uplink else senv.own_gain_dn()).astype(
+        jnp.float32)
+    g_raw_s = (senv.g_up if uplink else senv.g_dn).astype(jnp.float32)
+    tx_s = tx[layout.perm]
+    w_intra_s = tx_s * own_s if uplink else tx_s
+
+    from repro.kernels.noma_rates import noma_pairwise_kernel
+    ki, kx = noma_pairwise_kernel(
+        own_s, own_s, w_intra_s, tx_s, g_raw_s, senv.ap, senv.ap,
+        descending=descending, uplink=uplink, block_u=layout.block_u,
+        block_v=layout.block_v, block_m=8, block_n=2,
+        tiles=(layout.tile_u, layout.tile_v), interpret=True)
+
+    own = (env.own_gain_up() if uplink else env.own_gain_dn()).astype(
+        jnp.float32)
+    g_raw = (env.g_up if uplink else env.g_dn).astype(jnp.float32)
+    w_intra = tx * own if uplink else tx
+    gi, gx = ref.noma_pairwise_gather_free_ref(
+        own, own, w_intra, tx, g_raw, env.ap, descending=descending,
+        uplink=uplink)
+    _close(jnp.take(ki, layout.inv, axis=0), gi)
+    _close(jnp.take(kx, layout.inv, axis=0), gx)
+
+
+def test_block_sparse_oracle_matches_dense_reference():
+    """The tile lists cover every same-cell pair exactly once: the
+    tile-restricted oracle equals the dense gather-free reference, forward
+    tiles and backward tiles (same set, reordered) alike -- including when
+    adjacent cells share a boundary block (non-divisible cell sizes)."""
+    u, n, m = 19, 4, 5
+    ap = np.sort(np.asarray([0] * 7 + [1] * 3 + [2] * 8 + [3] * 1))
+    env, beta, p_up, _ = _case(u, n, m, seed=9, ap=ap)
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    senv = layout.env
+    own = senv.own_gain_up().astype(jnp.float32)
+    tx = (beta * p_up[:, None]).astype(jnp.float32)[layout.perm]
+    g_raw = senv.g_up.astype(jnp.float32)
+
+    bi, bx = ref.noma_cell_block_ref(
+        own, own, tx * own, tx, g_raw, senv.ap, layout.tile_u,
+        layout.tile_v, layout.block_u, layout.block_v,
+        descending=True, uplink=True)
+    di, dx = ref.noma_pairwise_gather_free_ref(
+        own, own, tx * own, tx, g_raw, senv.ap, descending=True, uplink=True)
+    _close(bi, di)
+    _close(bx, dx)
+    # backward list: same coverage with roles swapped
+    bwd_i, _ = ref.noma_cell_block_ref(
+        own, own, tx * own, tx, g_raw, senv.ap, layout.bwd_tile_v,
+        layout.bwd_tile_u, layout.block_v, layout.block_u,
+        descending=True, uplink=True)
+    _close(bwd_i, di)
+
+
+def test_cell_tiles_counts_sum_of_cell_sizes():
+    """Tile counts are the per-cell block products (sum-of-cell-sizes^2
+    scaling), deduped across cells sharing a boundary block."""
+    ap = np.asarray([0, 0, 0, 0, 1, 1, 1, 1], np.int32)
+    tu, tv, _, _ = cell_tiles(ap, 4, 4)
+    assert len(tu) == 2                       # two 1x1-block cells
+    ap = np.zeros(16, np.int32)               # one giant cell, 4x4 blocks
+    tu, tv, _, _ = cell_tiles(ap, 4, 4)
+    assert len(tu) == 16
+    ap = np.asarray([0, 0, 0, 1, 1, 1], np.int32)  # boundary block shared
+    tu, tv, _, _ = cell_tiles(ap, 4, 4)
+    # both cells touch blocks {0, 1}: 4 tiles total, deduped (no repeats)
+    assert len(tu) == 4
+    assert len(set(zip(tu.tolist(), tv.tolist()))) == len(tu)
+    # non-decreasing fwd order (the kernel's revisit contract)
+    assert (np.diff(tu) >= 0).all()
+
+
+def _intra_grid_sizes(fn, *args):
+    """Grid tuples of every pallas_call in fn's jaxpr (the intra kernel is
+    the only 2D grid: (NM, T))."""
+    grids = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                grids.append(tuple(eqn.params["grid_mapping"].grid))
+            for p in eqn.params.values():
+                vals = p if isinstance(p, (tuple, list)) else [p]
+                for sub in vals:
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        walk(sub.jaxpr)
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        walk(sub)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return grids
+
+
+def test_intra_grid_scales_with_cell_sizes_not_u_squared():
+    """The structural acceptance criterion, proven from the LOWERED jaxpr:
+    with U=32 in eight 4-user cells (block 4), the intra pallas grid is
+    (NM, 8) -- one diagonal tile per cell -- while the dense (no-layout)
+    schedule launches (NM, 64) = (U/BU)^2 tiles. The grid shape is what the
+    hardware executes; sum-of-cell-sizes^2 vs U^2 is read off directly."""
+    u, n, m = 32, 8, 8
+    ap = np.repeat(np.arange(8, dtype=np.int32), 4)
+    env, beta, p_up, _ = _case(u, n, m, seed=2, ap=ap)
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    assert layout.n_tiles == 8                # sum of (c/4)^2 = 8 * 1
+
+    tx = beta * p_up[:, None]
+
+    def fwd(with_layout):
+        def f(t):
+            return ops.noma_pairwise_up(
+                env, t, interpret=True, block_u=4, block_v=4, block_m=8,
+                layout=layout if with_layout else None)
+        return f
+
+    sparse = _intra_grid_sizes(fwd(True), tx)
+    dense = _intra_grid_sizes(fwd(False), tx)
+    # intra kernel = the unique 2D grid in each program
+    sp = [g for g in sparse if len(g) == 2]
+    dn = [g for g in dense if len(g) == 2]
+    assert sp and dn, (sparse, dense)
+    assert sp[0][1] == 8, sp                  # sum-of-cell-sizes^2 tiles
+    assert dn[0][1] == (u // 4) ** 2, dn      # U^2 tiles without layout
+
+    # backward follows the same layout: grad jaxpr's 2D grids are all
+    # tile-list sized, never (U/BU)^2
+    def loss(t):
+        i, x = ops.noma_pairwise_up(env, t, interpret=True, block_u=4,
+                                    block_v=4, block_m=8, layout=layout)
+        return jnp.sum(i) + jnp.sum(x)
+
+    ggrids = [g for g in _intra_grid_sizes(jax.grad(loss), tx) if len(g) == 2]
+    assert ggrids and all(g[1] == 8 for g in ggrids), ggrids
+
+
+def test_layout_block_mismatch_raises():
+    """A layout built for a different user count is refused (silent wrong
+    answers otherwise); its own blocks override the call's block args."""
+    env, beta, p_up, _ = _case(12, 3, 4, seed=1)
+    env2, *_ = _case(10, 3, 4, seed=1)
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    with pytest.raises(ValueError, match="built for U="):
+        ops.noma_pairwise_up(env2, beta[:10] * p_up[:10, None],
+                             interpret=True, layout=layout)
+    # blocks come from the layout, not the (defaulted) call args
+    i1, _ = ops.noma_pairwise_up(env, beta * p_up[:, None], interpret=True,
+                                 layout=layout)
+    i2, _ = ops.noma_pairwise_up(env, beta * p_up[:, None], interpret=True,
+                                 block_u=4, block_v=4)
+    _close(i1, i2)
+
+
+def test_utility_grad_with_layout(small_env, weights):
+    """The full paper-utility gradient (the GD hot-loop gradient) through
+    utility(..., layout=) matches einsum -- the layout threads through
+    delay_energy/user_rates without perturbing the math."""
+    from repro.core import profiles
+    from repro.core.types import GdVars
+    from repro.core.utility import utility
+
+    env = small_env
+    u, m = env.n_users, env.n_sub
+    layout = build_cell_layout(env, block_u=4, block_v=4)
+    beta = jax.random.dirichlet(jax.random.PRNGKey(3), jnp.ones(m), (u,))
+    v = GdVars(beta_up=beta, beta_dn=beta,
+               p_up=jnp.full((u,), 0.1), p_dn=jnp.full((u,), 1.0),
+               r=jnp.full((u,), 4.0))
+    prof = profiles.nin()
+
+    ge = jax.grad(lambda vv: utility(env, prof, jnp.int32(2), vv, weights,
+                                     backend="einsum"))(v)
+    gl = jax.grad(lambda vv: utility(env, prof, jnp.int32(2), vv, weights,
+                                     backend="pallas_interpret",
+                                     layout=layout))(v)
+    for want, got in zip(jax.tree.leaves(ge), jax.tree.leaves(gl)):
+        _close(got, want)

@@ -148,30 +148,35 @@ def _gather_free_case(u, n, m, seed=0):
     return env, tx, own_up, own_dn
 
 
-@pytest.mark.parametrize("u,n,m,bu,bv,bm", [
-    (10, 3, 6, 4, 8, 8),     # non-divisible U/V/M, mismatched block_u/block_v
-    (20, 3, 6, 16, 8, 8),
-    (13, 5, 7, 8, 4, 128),
+@pytest.mark.parametrize("u,n,m,bu,bv,bm,bn", [
+    (10, 3, 6, 4, 8, 8, 2),    # non-divisible U/V/M, mismatched block_u/block_v
+    (20, 3, 6, 16, 8, 8, 8),   # block_n > n_aps (clamped in-kernel)
+    (13, 5, 7, 8, 4, 128, 4),  # non-divisible N too (5 % 4 != 0)
+    (12, 13, 6, 8, 8, 8, 8),   # non-divisible N at block 8 (13 % 8 != 0)
 ])
 @pytest.mark.parametrize("uplink", [True, False])
 @pytest.mark.parametrize("descending", [True, False])
-def test_noma_gather_free_parity(u, n, m, bu, bv, bm, uplink, descending):
-    """The gather-free kernel (raw gains + AP one-hot in, AP selection and
-    same_cell derived in-kernel) matches BOTH oracles at 1e-5: the old
-    gathered-kernel reference (explicit g_vu = g[*, ap, *] + same mask --
-    the math the pre-gather kernel computed) and the gather-free reference,
-    for both links and both SIC orders."""
+@pytest.mark.parametrize("ap_mode", ["iota", "onehot"])
+def test_noma_gather_free_parity(u, n, m, bu, bv, bm, bn, uplink, descending,
+                                 ap_mode):
+    """The gather-free cell-block kernels (raw gains + int32 AP ids in, AP
+    selection and same_cell derived in-kernel, N-tiled accumulators) match
+    BOTH oracles at 1e-5: the old gathered-kernel reference (explicit
+    g_vu = g[*, ap, *] + same mask -- the math the pre-gather kernel
+    computed) and the gather-free reference, for both links, both SIC
+    orders, and both AP-structure modes -- including N not divisible by
+    block_n, where boundary N blocks are iota-masked."""
     from repro.kernels.noma_rates import noma_pairwise_kernel
 
     env, tx, own_up, own_dn = _gather_free_case(u, n, m, seed=u + n)
     own = own_up if uplink else own_dn
     g_raw = (env.g_up if uplink else env.g_dn).astype(jnp.float32)
-    oh = jax.nn.one_hot(env.ap, n, dtype=jnp.float32)
     w_intra = tx * own if uplink else tx
 
-    ki, kx = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, oh, oh,
-                                  descending=descending, uplink=uplink,
-                                  block_u=bu, block_v=bv, block_m=bm,
+    ki, kx = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, env.ap,
+                                  env.ap, descending=descending,
+                                  uplink=uplink, block_u=bu, block_v=bv,
+                                  block_m=bm, block_n=bn, ap_mode=ap_mode,
                                   interpret=True)
     gi, gx = ref.noma_pairwise_gather_free_ref(own, own, w_intra, tx, g_raw,
                                                env.ap, descending=descending,
@@ -187,19 +192,43 @@ def test_noma_gather_free_parity(u, n, m, bu, bv, bm, uplink, descending):
 
 
 @pytest.mark.parametrize("uplink", [True, False])
-def test_noma_gather_free_single_cell_inter_is_exactly_zero(uplink):
+@pytest.mark.parametrize("ap_mode", ["iota", "onehot"])
+def test_noma_gather_free_single_cell_inter_is_exactly_zero(uplink, ap_mode):
     """N=1: every user shares the one AP, so the inter-cell term must be
-    EXACTLY zero (the in-kernel (1 - onehot) factor is identically 0.0),
+    EXACTLY zero (the in-kernel other-cell mask is identically false),
     not merely small."""
     from repro.kernels.noma_rates import noma_pairwise_kernel
 
     env, tx, own_up, own_dn = _gather_free_case(9, 1, 12, seed=3)
     own = own_up if uplink else own_dn
     g_raw = (env.g_up if uplink else env.g_dn).astype(jnp.float32)
-    oh = jax.nn.one_hot(env.ap, 1, dtype=jnp.float32)
     w_intra = tx * own if uplink else tx
-    _, inter = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, oh, oh,
-                                    descending=uplink, uplink=uplink,
+    _, inter = noma_pairwise_kernel(own, own, w_intra, tx, g_raw, env.ap,
+                                    env.ap, descending=uplink, uplink=uplink,
                                     block_u=8, block_v=8, block_m=8,
-                                    interpret=True)
+                                    ap_mode=ap_mode, interpret=True)
     np.testing.assert_array_equal(np.asarray(inter), 0.0)
+
+
+def test_autotune_candidates_fit_vmem_ceiling():
+    """Every (BU, BV, BM, BN) configuration the kernel_bench autotuner is
+    allowed to pick stays under the 16 MB VMEM ceiling -- for both
+    directions and both links, and INDEPENDENT of the total AP count: the
+    budget at n_aps=4096 must equal the budget at n_aps=16 (the N-tiled
+    accumulators are (BN, BM) blocks, so n_aps only clamps BN)."""
+    from repro.kernels.noma_rates import (AUTOTUNE_BLOCKS,
+                                          VMEM_CEILING_BYTES,
+                                          vmem_block_bytes)
+
+    for bu, bv, bm, bn in AUTOTUNE_BLOCKS:
+        budgets = {}
+        for n_aps in (16, 1024, 4096):
+            for direction in ("fwd", "bwd"):
+                for uplink in (True, False):
+                    b = vmem_block_bytes(bu, bv, bm, bn, n_aps=n_aps,
+                                         direction=direction, uplink=uplink)
+                    assert b < VMEM_CEILING_BYTES, (
+                        (bu, bv, bm, bn), n_aps, direction, uplink, b)
+                    budgets.setdefault((direction, uplink), set()).add(b)
+        for key, vals in budgets.items():
+            assert len(vals) == 1, ((bu, bv, bm, bn), key, vals)
