@@ -33,11 +33,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import analysis
 from repro.core import channel, make_env
 from repro.kernels import build_cell_layout, ops
 from repro.kernels.noma_rates import (AUTOTUNE_BLOCKS, VMEM_CEILING_BYTES,
+                                      dense_tile_count, max_vmem_block_bytes,
                                       vmem_block_bytes)
-from benchmarks.paper_common import emit
+from benchmarks.paper_common import audit_meta, emit
 
 # VPU-aligned tiles of the deployed schedule (DESIGN.md Sec. 4).
 BU = BV = 8
@@ -142,24 +144,31 @@ def _autotune_rows(quick: bool):
     rows, table = [], []
     for blocks in candidates:
         bu, bv, bm, bn = blocks
-        vmem = max(vmem_block_bytes(bu, bv, bm, bn, n_aps=SMOKE_N,
-                                    direction=d, uplink=l)
-                   for d in ("fwd", "bwd") for l in (True, False))
+        vmem = max_vmem_block_bytes(bu, bv, bm, bn, n_aps=SMOKE_N)
         if vmem >= VMEM_CEILING_BYTES:
             rows.append((f"noma_autotune:skipped:bu{bu}_bv{bv}_bm{bm}_bn{bn}",
                          float(vmem), "over VMEM ceiling, not timed",
                          {"blocks": list(blocks)}))
             continue
         layout = build_cell_layout(env, block_u=bu, block_v=bv)
-        stats = _time(_grad_step(env, None, blocks=blocks, layout=layout),
-                      beta, p_up, p_dn, n=2 if quick else 3)
+        step = _grad_step(env, None, blocks=blocks, layout=layout)
+        # Every timed candidate is audited against the memory-model rules
+        # before it can win: the traced program must keep each kernel block
+        # under the VMEM budget and launch exactly the layout's tile list.
+        report = analysis.audit(
+            step, beta, p_up, p_dn,
+            rules=[analysis.VmemCeiling(),
+                   analysis.SparseGrid(layout.n_tiles)],
+            label=f"autotune:bu{bu}_bv{bv}_bm{bm}_bn{bn}")
+        stats = _time(step, beta, p_up, p_dn, n=2 if quick else 3)
         meta = {"blocks": list(blocks), "vmem_block_bytes": float(vmem),
-                **_stats_meta(stats)}
+                "audit": audit_meta(report), **_stats_meta(stats)}
         rows.append((f"noma_autotune:step_us:bu{bu}_bv{bv}_bm{bm}_bn{bn}",
                      stats["median_us"],
                      f"interpret grad step, U={SMOKE_U} N={SMOKE_N} "
                      f"M={SMOKE_M} (median of {stats['reps']})", meta))
-        table.append((stats["median_us"], blocks, meta))
+        if report.ok:   # a rule-violating candidate can never be the winner
+            table.append((stats["median_us"], blocks, meta))
     if table:
         best_us, best_blocks, best_meta = min(table, key=lambda t: t[0])
         rows.append(("noma_autotune:selected_us", best_us,
@@ -320,17 +329,25 @@ def run(quick: bool = False):
     env = make_env(jax.random.PRNGKey(5), 16, 4, 8)
     beta = jnp.ones((16, 8)) / 8
     p = jnp.full((16,), 0.2)
-    st = _time(lambda e, bb, pp: ops.noma_uplink_rates_jit(e, bb, pp,
-                                                           interpret=True),
-               env, beta, p, n=2)
+    rates_fn = lambda e, bb, pp: ops.noma_uplink_rates_jit(e, bb, pp,  # noqa: E731
+                                                           interpret=True)
+    st = _time(rates_fn, env, beta, p, n=2)
     noma_rows.append(("noma_rates:interpret_us", st["median_us"],
                       "CPU interpret (sanity)", _stats_meta(st)))
     noma_rows.append(("noma_rates:paper_scale_uvm_tensor_GB",
                       1250 * 1250 * 250 * 4 / 1e9,
                       "naive (U,V,M) fp32 the kernel avoids materializing"))
+    # The artifact's noma rows carry the invariant verdict for the program
+    # they measure (dense schedule: layout=None -> dense_tile_count tiles).
+    noma_audit = audit_meta(analysis.audit(
+        rates_fn, env, beta, p,
+        rules=[analysis.VmemCeiling(),
+               analysis.SparseGrid(dense_tile_count(16, 16))],
+        label="noma_rates_jit"))
 
     einsum_rows, kernel_rows, gathered_rows, meas_rows = _grad_rows(quick)
-    emit("kernel_bench", noma_rows + kernel_rows, meta=NOMA_KERNEL_META)
+    emit("kernel_bench", noma_rows + kernel_rows, meta=NOMA_KERNEL_META,
+         audit=noma_audit)
     emit("kernel_bench", gathered_rows, meta=NOMA_GATHERED_META)
     emit("kernel_bench", meas_rows, meta=NOMA_MEAS_META)
     emit("kernel_bench", einsum_rows, meta=NOMA_EINSUM_META)

@@ -1,0 +1,50 @@
+"""repro.analysis: static program audits for the kernel/engine invariants.
+
+The PRs 3-6 performance claims rest on structural properties of the
+compiled programs (no host transfers, no materialized pairwise tensors,
+block-sparse SIC grids, VMEM-bounded kernels, recompile-free warm starts).
+This package makes them machine-checked: a generic jaxpr visitor, a rule
+catalog, an ``audit(fn, *args, rules=[...])`` entry point, engine-level
+probes, and a CLI (``python -m repro.analysis``) that audits the engine's
+plan/replan/replan_many programs across presets and SINR backends and
+emits a JSON report. See README "Program invariants".
+"""
+from repro.analysis.audit import audit, audit_jaxpr  # noqa: F401
+from repro.analysis.engine_audit import (  # noqa: F401
+    CacheKeyDiscipline,
+    audit_engine,
+    engine_rules,
+    runtime_probe,
+)
+from repro.analysis.report import (  # noqa: F401
+    AuditError,
+    AuditReport,
+    Finding,
+    merge_reports,
+)
+from repro.analysis.rules import (  # noqa: F401
+    HOST_CALLBACK_PRIMS,
+    PAIRWISE_ARITH,
+    NoGatherAbove,
+    NoHostTransfer,
+    NoPad3D,
+    NoPairwiseIntermediate,
+    ProgramRecord,
+    Rule,
+    SparseGrid,
+    StableSignature,
+    VmemCeiling,
+    base_rules,
+    kernel_rules,
+)
+from repro.analysis.visitor import (  # noqa: F401
+    PallasCallInfo,
+    iter_eqns,
+    pallas_calls,
+    trace,
+)
+
+CATALOG: tuple[type, ...] = (
+    NoHostTransfer, NoPairwiseIntermediate, NoGatherAbove, NoPad3D,
+    VmemCeiling, SparseGrid, StableSignature, CacheKeyDiscipline,
+)

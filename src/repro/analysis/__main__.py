@@ -1,0 +1,115 @@
+"""CLI: audit the engine's compiled programs across presets and backends.
+
+    python -m repro.analysis [--presets dense_urban hotspot]
+                             [--backends einsum pallas_interpret]
+                             [--out report.json] [--no-runtime]
+
+Per (preset, backend) the plan/replan/replan_many programs are traced and
+audited against the rule catalog (trace-only, nothing executes -- cheap at
+any scale). Unless --no-runtime, a small-env engine additionally runs the
+live probes: exact compile counts across cold->warm->warm (the weak-type
+recompile gate), zero-host-transfer dispatch under jax.transfer_guard, and
+the cache-key discipline sweep. Exit status 1 on any finding; the JSON
+report is machine-readable (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.analysis.engine_audit import (
+    CacheKeyDiscipline,
+    audit_engine,
+    runtime_probe,
+)
+from repro.analysis.report import AuditReport
+from repro.core import make_env, make_weights, profiles
+from repro.core.types import GdConfig
+from repro.planning import PlannerEngine
+from repro.scenarios import presets
+
+DEFAULT_PRESETS = ("dense_urban", "hotspot")
+DEFAULT_BACKENDS = ("einsum", "pallas_interpret")
+
+
+def preset_env(name: str, seed: int = 0):
+    cfg = presets.get(name)
+    return make_env(jax.random.PRNGKey(seed), n_users=cfg.n_users,
+                    n_aps=cfg.n_aps, n_sub=cfg.n_sub)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__.split("\n\n")[0])
+    ap.add_argument("--presets", nargs="+", default=list(DEFAULT_PRESETS),
+                    choices=presets.names(), metavar="PRESET",
+                    help=f"scenario presets to audit (default: "
+                         f"{' '.join(DEFAULT_PRESETS)}; "
+                         f"available: {' '.join(presets.names())})")
+    ap.add_argument("--backends", nargs="+", default=list(DEFAULT_BACKENDS),
+                    metavar="BACKEND",
+                    help="SINR backends to audit (default: "
+                         f"{' '.join(DEFAULT_BACKENDS)})")
+    ap.add_argument("--fleet", type=int, default=2,
+                    help="fleet size for the replan_many audit (default 2)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the JSON report here (default: stdout only "
+                         "prints the summary)")
+    ap.add_argument("--no-runtime", action="store_true",
+                    help="skip the executing probes (compile counts, "
+                         "transfer guard, cache discipline)")
+    args = ap.parse_args(argv)
+
+    prof = profiles.nin()
+    report = AuditReport()
+
+    for preset in args.presets:
+        env = preset_env(preset)
+        weights = make_weights(env.n_users)
+        for backend in args.backends:
+            engine = PlannerEngine(prof, weights=weights,
+                                   sinr_backend=backend)
+            label = f"{preset}/{backend}"
+            report.merge(audit_engine(engine, env, fleet=args.fleet,
+                                      label=label))
+            print(f"audited {label}: plan/replan/replan_many "
+                  f"({len(report.findings)} finding(s) so far)")
+
+    if not args.no_runtime:
+        # Live probes run on a small env (they execute the solver); the
+        # invariants they check are shape-independent engine properties.
+        env_a = make_env(jax.random.PRNGKey(1), n_users=8, n_aps=2, n_sub=4)
+        env_b = make_env(jax.random.PRNGKey(2), n_users=8, n_aps=2, n_sub=4)
+        env_c = make_env(jax.random.PRNGKey(3), n_users=6, n_aps=2, n_sub=4)
+        cfg = GdConfig(max_iters=40)
+        probe_eng = PlannerEngine(prof, weights=make_weights(8), cfg=cfg)
+        report.merge(runtime_probe(probe_eng, env_a, env_b, label="runtime"))
+        cache_eng = PlannerEngine(prof, weights=make_weights(8), cfg=cfg)
+        report.merge(CacheKeyDiscipline().probe(cache_eng, env_a, env_c,
+                                                label="runtime"))
+        print("ran runtime probes (compile log, transfer guard, cache keys)")
+
+    payload = report.to_dict()
+    payload["presets"] = list(args.presets)
+    payload["backends"] = list(args.backends)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+
+    print(f"programs audited: {len(report.programs)}; "
+          f"rules: {', '.join(report.rules)}")
+    if report.ok:
+        print("AUDIT OK: no findings")
+        return 0
+    print(f"AUDIT FAILED: {len(report.findings)} finding(s)")
+    for f in report.findings:
+        print(f"  {f}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""Findings and reports for the program auditor.
+
+A Finding is one rule violation anchored to one audited program; an
+AuditReport aggregates the findings of one or many audit() calls together
+with the programs and rules that were checked (so a green report says
+*what* was proven, not just that nothing failed). Reports serialize to
+plain dicts for the CLI's machine-readable JSON artifact and for the
+BENCH rows' ``audit`` meta field.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+
+class AuditError(AssertionError):
+    """Raised by AuditReport.raise_if_failed(); the message lists every
+    finding with its actionable remediation text."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation in one audited program.
+
+    rule      the catalog rule's name (e.g. "no_gather_above").
+    program   label of the audited program (e.g. "dense_urban/pallas:replan").
+    message   what was found and what to do about it.
+    detail    optional machine-readable payload (shapes, grids, byte counts).
+    """
+
+    rule: str
+    program: str
+    message: str
+    detail: dict = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.program}: {self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "program": self.program,
+                "message": self.message, "detail": dict(self.detail)}
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """The outcome of auditing one or more programs against a rule set."""
+
+    programs: list[str] = dataclasses.field(default_factory=list)
+    rules: list[str] = dataclasses.field(default_factory=list)
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def merge(self, other: "AuditReport") -> "AuditReport":
+        """Fold another report in place (CLI aggregation); returns self."""
+        for p in other.programs:
+            if p not in self.programs:
+                self.programs.append(p)
+        for r in other.rules:
+            if r not in self.rules:
+                self.rules.append(r)
+        self.findings.extend(other.findings)
+        return self
+
+    def raise_if_failed(self) -> None:
+        if self.findings:
+            lines = "\n".join(str(f) for f in self.findings)
+            raise AuditError(
+                f"{len(self.findings)} audit finding(s):\n{lines}")
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "programs": list(self.programs),
+            "rules": list(self.rules),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def merge_reports(reports: Iterable[AuditReport]) -> AuditReport:
+    out = AuditReport()
+    for r in reports:
+        out.merge(r)
+    return out

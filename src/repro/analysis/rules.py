@@ -1,0 +1,313 @@
+"""The rule catalog: each kernel/engine invariant as a small checkable class.
+
+These are the program invariants PRs 3-6 established (and that the tests
+previously asserted with ad-hoc per-file jaxpr walkers):
+
+  NoHostTransfer          replan-path programs contain no host callbacks.
+  NoPairwiseIntermediate  no (U, V, M) arithmetic intermediate outside the
+                          Pallas kernels (the pairwise tensor only streams
+                          through them block by block).
+  NoGatherAbove           no (>=U, >=U, M) gather -- the gather-free kernels
+                          select the serving AP in-kernel from raw state.
+  NoPad3D                 no rank-3 pad -- kernel operands enter unpadded,
+                          boundary blocks are masked in-kernel.
+  VmemCeiling             every pallas_call's per-block working set fits the
+                          VMEM budget (derived from the kernel body's refs).
+  SparseGrid              the tile-driven intra/SIC kernel launches exactly
+                          the expected tile count (sum-of-cell-blocks^2 with
+                          a CellLayout, the dense grid without).
+  StableSignature         program outputs carry no weak types (the PR 3
+                          recompile bug), and cold/warm signatures agree.
+
+Engine-level discipline (CacheKeyDiscipline, compile counting) lives in
+analysis/engine_audit.py -- it probes a live PlannerEngine rather than one
+jaxpr. Rules are stateless and reusable: construct once, run against any
+number of ProgramRecords via ``rule.check(record)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+
+from repro.analysis.report import Finding
+from repro.analysis.visitor import (
+    ClosedJaxpr,
+    iter_eqns,
+    out_shapes,
+    pallas_calls,
+)
+from repro.kernels.noma_rates import VMEM_CEILING_BYTES
+
+# The arithmetic primitives whose (U, V, M) outputs would mean the pairwise
+# tensor was materialized (moved here from tests/test_grad_kernels.py).
+PAIRWISE_ARITH = frozenset({
+    "mul", "add", "sub", "div", "select_n", "lt", "gt", "le", "ge",
+    "and", "or", "max", "min", "log1p", "exp", "integer_pow", "pow",
+})
+
+# Primitives that force a host round-trip inside a compiled program.
+HOST_CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramRecord:
+    """One traced program under audit: a label plus its ClosedJaxpr.
+    closed is None only for synthetic label-carrier records (e.g.
+    StableSignature.compare, which compares avals, not a program)."""
+
+    label: str
+    closed: ClosedJaxpr | None
+
+    @property
+    def jaxpr(self):
+        assert self.closed is not None, "record has no traced program"
+        return self.closed.jaxpr
+
+
+class Rule:
+    """Base class: a named, stateless check over one ProgramRecord."""
+
+    name = "rule"
+
+    def check(self, record: ProgramRecord) -> list[Finding]:
+        return list(self.findings(record))
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        doc = (type(self).__doc__ or "").strip().splitlines()
+        return doc[0] if doc else self.name
+
+    def _finding(self, record: ProgramRecord, message: str,
+                 **detail: Any) -> Finding:
+        return Finding(rule=self.name, program=record.label,
+                       message=message, detail=detail)
+
+
+class NoHostTransfer(Rule):
+    """No host callbacks: the replan path must dispatch asynchronously."""
+
+    name = "no_host_transfer"
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for eqn in iter_eqns(record.jaxpr):
+            if eqn.primitive.name in HOST_CALLBACK_PRIMS:
+                yield self._finding(
+                    record,
+                    f"'{eqn.primitive.name}' forces a host round-trip inside "
+                    "the compiled program; keep the replan path "
+                    "device-resident (trace the decision with lax ops, or "
+                    "move the host work outside the jitted program)",
+                    primitive=eqn.primitive.name)
+
+
+class _PairwiseShapeRule(Rule):
+    """Shared shape predicate: a (>=U, >=U, M) trailing-3 output with equal
+    receiver/interferer axes is the materialized pairwise tensor; leading
+    batch dims (vmapped fleet programs) are ignored. The squareness check
+    keeps per-split solver stacks like (2, S, U, M) from false-flagging
+    when the split count happens to exceed U at toy scale."""
+
+    def __init__(self, n_users: int):
+        self.n_users = int(n_users)
+
+    def _pairwise(self, shape: tuple[int, ...]) -> bool:
+        return (len(shape) >= 3 and shape[-3] == shape[-2]
+                and shape[-3] >= self.n_users)
+
+
+class NoPairwiseIntermediate(_PairwiseShapeRule):
+    """No (U, V, M) arithmetic outside the kernels: the pairwise tensor
+    must only stream through pallas_call block by block."""
+
+    name = "no_pairwise_intermediate"
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for eqn in iter_eqns(record.jaxpr, enter_pallas=False):
+            if eqn.primitive.name not in PAIRWISE_ARITH:
+                continue
+            for shape in out_shapes(eqn):
+                if self._pairwise(shape):
+                    yield self._finding(
+                        record,
+                        f"'{eqn.primitive.name}' materializes a pairwise "
+                        f"{shape} intermediate (O(U^2 M) memory at paper "
+                        "scale); route the SINR reduction through the "
+                        "Pallas kernels (backend='pallas'), which stream "
+                        "it in (BU, BV, BM) blocks",
+                        primitive=eqn.primitive.name, shape=list(shape))
+
+
+class NoGatherAbove(_PairwiseShapeRule):
+    """No (>=U, >=U, M) gather: AP-indexed gain selection happens in-kernel
+    from the raw (U, N, M) state, never as a materialized g[:, ap, :]."""
+
+    name = "no_gather_above"
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for eqn in iter_eqns(record.jaxpr, enter_pallas=False):
+            if eqn.primitive.name != "gather":
+                continue
+            for shape in out_shapes(eqn):
+                if self._pairwise(shape):
+                    yield self._finding(
+                        record,
+                        f"gather materializes an AP-indexed {shape} gain "
+                        "tensor; the gather-free kernels select the serving "
+                        "AP in-kernel from the raw (U, N, M) state -- index "
+                        "per scan step or move the selection into the "
+                        "kernel (see li_gd.greedy_round_up)",
+                        shape=list(shape))
+
+
+class NoPad3D(Rule):
+    """No rank-3 pad: kernel operands enter pallas_call unpadded; boundary
+    blocks are masked in-kernel (cdiv over-coverage + iota masks)."""
+
+    name = "no_pad_3d"
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for eqn in iter_eqns(record.jaxpr, enter_pallas=False):
+            if eqn.primitive.name != "pad":
+                continue
+            for shape in out_shapes(eqn):
+                if len(shape) >= 3:
+                    yield self._finding(
+                        record,
+                        f"pad copies a rank-{len(shape)} tensor {shape} "
+                        "(a _pad_to of a kernel operand); pass operands "
+                        "unpadded and mask the boundary block in-kernel "
+                        "against the true extent",
+                        shape=list(shape))
+
+
+class VmemCeiling(Rule):
+    """Every pallas_call's per-block VMEM working set (inputs + outputs +
+    scratch, derived from the kernel body's memory refs) fits the budget."""
+
+    name = "vmem_ceiling"
+
+    def __init__(self, budget_bytes: int = VMEM_CEILING_BYTES):
+        self.budget_bytes = int(budget_bytes)
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for pc in pallas_calls(record.jaxpr):
+            if pc.vmem_bytes >= self.budget_bytes:
+                yield self._finding(
+                    record,
+                    f"kernel '{pc.name}' needs {pc.vmem_bytes} bytes of "
+                    f"VMEM per block, over the {self.budget_bytes}-byte "
+                    "budget; shrink the (BU, BV, BM, BN) block sizes "
+                    "(see noma_rates.AUTOTUNE_BLOCKS for vetted candidates)",
+                    kernel=pc.name, vmem_bytes=pc.vmem_bytes,
+                    budget_bytes=self.budget_bytes)
+
+
+class SparseGrid(Rule):
+    """The tile-driven intra/SIC kernels (the programs' only scalar-prefetch
+    pallas_calls) launch exactly the expected tile count."""
+
+    name = "sparse_grid"
+
+    def __init__(self, expected_tiles: int, require: bool = True):
+        # expected_tiles: CellLayout.n_tiles when a layout is threaded, or
+        # noma_rates.dense_tile_count(...) for the dense fallback schedule.
+        self.expected_tiles = int(expected_tiles)
+        self.require = require
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        intra = [pc for pc in pallas_calls(record.jaxpr)
+                 if pc.num_scalar_prefetch == 2]
+        if not intra and self.require:
+            yield self._finding(
+                record,
+                "no tile-driven intra/SIC kernel (a pallas_call with 2 "
+                "scalar-prefetch operands) found; the program does not run "
+                "the cell-block SIC path at all",
+            )
+            return
+        for pc in intra:
+            # The tile axis is the innermost grid dim; vmapped fleet
+            # programs prepend the batch dim, leaving it in place.
+            if pc.grid[-1] != self.expected_tiles:
+                yield self._finding(
+                    record,
+                    f"intra kernel '{pc.name}' launches grid {pc.grid} "
+                    f"({pc.grid[-1]} tiles) but the schedule expects "
+                    f"{self.expected_tiles}; the tile list does not match "
+                    "the CellLayout (rebuild the layout for this env/blocks, "
+                    "or expect dense_tile_count for the no-layout path)",
+                    kernel=pc.name, grid=list(pc.grid),
+                    expected_tiles=self.expected_tiles)
+
+
+class StableSignature(Rule):
+    """Program outputs carry no weak types -- a weak-f32 leaf in a cold
+    PlanState re-traces the warm program on the first replan (the PR 3
+    recompile bug). compare() checks full cold/warm aval agreement."""
+
+    name = "stable_signature"
+
+    def findings(self, record: ProgramRecord) -> Iterator[Finding]:
+        for i, aval in enumerate(record.closed.out_avals):
+            if getattr(aval, "weak_type", False):
+                yield self._finding(
+                    record,
+                    f"output {i} ({aval}) is weak-typed; feeding it back as "
+                    "a warm-start operand re-traces the program (route "
+                    "outputs through planning.engine._strong_typed)",
+                    output_index=i, aval=str(aval))
+
+    @classmethod
+    def compare(cls, label: str, a: Any, b: Any) -> list[Finding]:
+        """Signature agreement between two aval pytrees (jax.eval_shape
+        outputs): identical treedefs and per-leaf shape/dtype/weak_type.
+        Used to prove warm(warm(state)) traces identically to warm(state)."""
+        rule = cls()
+        findings: list[Finding] = []
+        la, ta = jax.tree.flatten(a)
+        lb, tb = jax.tree.flatten(b)
+        record = ProgramRecord(label=label, closed=None)  # label carrier only
+        if ta != tb:
+            findings.append(rule._finding(
+                record, f"signature tree structure changed: {ta} != {tb}"))
+            return findings
+        for i, (xa, xb) in enumerate(zip(la, lb)):
+            sig_a = (tuple(xa.shape), str(xa.dtype),
+                     bool(getattr(xa, "weak_type", False)))
+            sig_b = (tuple(xb.shape), str(xb.dtype),
+                     bool(getattr(xb, "weak_type", False)))
+            if sig_a != sig_b:
+                findings.append(rule._finding(
+                    record,
+                    f"leaf {i} signature changed across epochs: "
+                    f"{sig_a} != {sig_b} (shape, dtype, weak_type); the "
+                    "warm program would recompile every epoch",
+                    leaf=i, before=list(map(str, sig_a)),
+                    after=list(map(str, sig_b))))
+        return findings
+
+
+# The memory-model rules that only make sense for Pallas-backed programs
+# (the einsum reference legitimately materializes the pairwise tensor).
+def kernel_rules(n_users: int,
+                 expected_tiles: int,
+                 budget_bytes: int = VMEM_CEILING_BYTES) -> list[Rule]:
+    return [
+        NoPairwiseIntermediate(n_users),
+        NoGatherAbove(n_users),
+        NoPad3D(),
+        VmemCeiling(budget_bytes),
+        SparseGrid(expected_tiles),
+    ]
+
+
+# Backend-independent program discipline.
+def base_rules() -> list[Rule]:
+    return [NoHostTransfer(), StableSignature()]

@@ -382,14 +382,16 @@ def greedy_round_up(env: NetworkEnv, beta: Array, p: Array) -> Array:
     one to the subchannel maximizing their SINR given interference from the
     users already assigned."""
     own = env.own_gain_up()                          # (U, M)
-    # gain of user v at user u's AP: (U_v, U_u, M)
-    g_at = env.g_up[:, env.ap, :]
 
     def step(assigned_interf, u):
         # assigned_interf: (U, M) interference each user would see at its AP
         sinr = p[u] * own[u] / (assigned_interf[u] + env.noise_up)
         m = jnp.argmax(beta[u] * jnp.log1p(sinr))
-        add = p[u] * g_at[u] * jax.nn.one_hot(m, env.n_sub)[None, :]
+        # gain of user u at every other user's AP, gathered per scan step:
+        # (U, M) at rest, never the full (U, U, M) pairwise tensor (the
+        # analysis.NoGatherAbove rule gates the whole plan program on this).
+        g_at_u = jnp.take(env.g_up, u, axis=0)[env.ap, :]
+        add = p[u] * g_at_u * jax.nn.one_hot(m, env.n_sub)[None, :]
         return assigned_interf + add, m.astype(jnp.int32)
 
     init = jnp.zeros_like(own)

@@ -13,11 +13,9 @@ Units:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

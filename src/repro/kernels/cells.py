@@ -68,6 +68,23 @@ class CellLayout:
     def n_users(self) -> int:
         return self.env.n_users
 
+    def dense_n_tiles(self) -> int:
+        """Tile count the dense (no-layout) schedule would launch for this
+        env at these blocks -- the U^2 baseline n_tiles is measured against
+        (and the analysis.SparseGrid expectation for layout-free programs)."""
+        from repro.kernels.noma_rates import dense_tile_count
+        return dense_tile_count(self.n_users, self.n_users,
+                                self.block_u, self.block_v)
+
+    def max_vmem_block_bytes(self, block_m: int = 128,
+                             block_n: int = 8) -> int:
+        """Worst-case per-block VMEM of the kernels this layout schedules
+        (its own block_u/block_v, maximized over direction x link) -- the
+        number the analysis.VmemCeiling budget gates."""
+        from repro.kernels.noma_rates import max_vmem_block_bytes
+        return max_vmem_block_bytes(self.block_u, self.block_v, block_m,
+                                    block_n, n_aps=self.env.n_aps)
+
 
 def cell_tiles(ap_sorted: np.ndarray, block_u: int, block_v: int):
     """Block-diagonal tile lists for an AP-sorted id vector.

@@ -75,6 +75,12 @@ AP_MODES = ("iota", "onehot")
 # Pallas double-buffers inputs, so kernels budget to half).
 VMEM_CEILING_BYTES = 16 * 1024 * 1024
 
+# The (BU, BV, BM, BN) blocks the ops wrappers -- and therefore the engine's
+# compiled programs -- use when the caller does not override them. Single
+# definition so the analyzer (repro.analysis) and benchmarks derive grid and
+# VMEM expectations from the same numbers the kernels actually launch with.
+DEFAULT_BLOCKS = (8, 8, 128, 8)
+
 # (BU, BV, BM, BN) candidates the kernel_bench autotuner may select from.
 # Every entry must satisfy vmem_block_bytes(...) < VMEM_CEILING_BYTES for
 # both directions and both links at any n_aps (enforced by
@@ -237,6 +243,29 @@ def _ap_contract_kernel(*refs, uplink: bool, n_aps: int, block_n: int,
     @pl.when(ni == nn - 1)
     def _store():
         out_ref[...] = acc_ref[...]
+
+
+def dense_tile_count(n_r: int, n_s: int, block_r: int = 8,
+                     block_s: int = 8) -> int:
+    """Tile count of the dense (no-CellLayout) intra/SIC schedule: every
+    (r-block, s-block) pair, with the same block clamping the kernels apply.
+    This is what the analysis.SparseGrid rule expects for programs that do
+    not thread a layout (the engine today -- see ROADMAP); with a layout the
+    expectation is CellLayout.n_tiles."""
+    br, bs = min(block_r, n_r), min(block_s, n_s)
+    return int(pl.cdiv(n_r, br)) * int(pl.cdiv(n_s, bs))
+
+
+def max_vmem_block_bytes(block_u: int = 8, block_v: int = 8,
+                         block_m: int = 128, block_n: int = 8,
+                         n_aps: int = 4) -> int:
+    """vmem_block_bytes maximized over direction x link: the single number a
+    block-size candidate must keep under VMEM_CEILING_BYTES (every autotune
+    candidate launches all four kernel directions across a grad step)."""
+    return max(
+        vmem_block_bytes(block_u, block_v, block_m, block_n, n_aps,
+                         direction=d, uplink=ul)
+        for d in ("fwd", "bwd") for ul in (True, False))
 
 
 @functools.lru_cache(maxsize=64)

@@ -14,7 +14,11 @@ import numpy as np
 
 from repro.kernels.cells import CellLayout
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.noma_rates import noma_pairwise_bwd_kernel, noma_pairwise_kernel
+from repro.kernels.noma_rates import (
+    DEFAULT_BLOCKS,
+    noma_pairwise_bwd_kernel,
+    noma_pairwise_kernel,
+)
 from repro.kernels.rg_lru import rg_lru_kernel
 from repro.core.types import LOG2, NetworkEnv
 
@@ -249,10 +253,10 @@ def noma_pairwise_up(
     env: NetworkEnv,
     tx: jax.Array,        # (U, M) beta_up * p_up
     interpret: bool = False,
-    block_u: int = 8,
-    block_v: int = 8,
-    block_m: int = 128,
-    block_n: int = 8,
+    block_u: int = DEFAULT_BLOCKS[0],
+    block_v: int = DEFAULT_BLOCKS[1],
+    block_m: int = DEFAULT_BLOCKS[2],
+    block_n: int = DEFAULT_BLOCKS[3],
     layout: CellLayout | None = None,
     ap_mode: str = "iota",
 ) -> tuple[jax.Array, jax.Array]:
@@ -280,10 +284,10 @@ def noma_pairwise_dn(
     env: NetworkEnv,
     tx: jax.Array,        # (U, M) beta_dn * p_dn
     interpret: bool = False,
-    block_u: int = 8,
-    block_v: int = 8,
-    block_m: int = 128,
-    block_n: int = 8,
+    block_u: int = DEFAULT_BLOCKS[0],
+    block_v: int = DEFAULT_BLOCKS[1],
+    block_m: int = DEFAULT_BLOCKS[2],
+    block_n: int = DEFAULT_BLOCKS[3],
     layout: CellLayout | None = None,
     ap_mode: str = "iota",
 ) -> tuple[jax.Array, jax.Array]:
@@ -303,10 +307,10 @@ def noma_uplink_rates(
     beta_up: jax.Array,   # (U, M)
     p_up: jax.Array,      # (U,)
     interpret: bool = False,
-    block_u: int = 8,
-    block_v: int = 8,
-    block_m: int = 128,
-    block_n: int = 8,
+    block_u: int = DEFAULT_BLOCKS[0],
+    block_v: int = DEFAULT_BLOCKS[1],
+    block_m: int = DEFAULT_BLOCKS[2],
+    block_n: int = DEFAULT_BLOCKS[3],
     layout: CellLayout | None = None,
     ap_mode: str = "iota",
 ) -> jax.Array:
@@ -332,10 +336,10 @@ def noma_downlink_rates(
     beta_dn: jax.Array,   # (U, M)
     p_dn: jax.Array,      # (U,)
     interpret: bool = False,
-    block_u: int = 8,
-    block_v: int = 8,
-    block_m: int = 128,
-    block_n: int = 8,
+    block_u: int = DEFAULT_BLOCKS[0],
+    block_v: int = DEFAULT_BLOCKS[1],
+    block_m: int = DEFAULT_BLOCKS[2],
+    block_n: int = DEFAULT_BLOCKS[3],
     layout: CellLayout | None = None,
     ap_mode: str = "iota",
 ) -> jax.Array:

@@ -5,6 +5,7 @@ from repro.planning.engine import (  # noqa: F401
     PlannerEngine,
     PlanState,
     WarmStateShapeError,
+    compile_log,
     member,
     stack_envs,
 )

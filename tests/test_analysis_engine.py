@@ -1,0 +1,133 @@
+"""Engine-level audits: exact recompile counts across cold/warm/cold
+dispatch (the PR 3 weak-type regression, now counted rather than inferred
+from cache_size), cache-key discipline probes with a deliberately broken
+engine as the positive control, the transfer-guard runtime probe, and the
+full trace-only audit_engine sweep on both SINR backends."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import analysis
+from repro.core import make_env, make_weights, profiles
+from repro.core.types import GdConfig
+from repro.planning import PlannerEngine, compile_log
+
+CFG = GdConfig(max_iters=25)
+
+
+def _engine(**kw):
+    kw.setdefault("weights", make_weights(8))
+    kw.setdefault("cfg", CFG)
+    return PlannerEngine(profiles.nin(), **kw)
+
+
+@pytest.fixture()
+def env_a():
+    return make_env(jax.random.PRNGKey(1), n_users=8, n_aps=2, n_sub=4)
+
+
+@pytest.fixture()
+def env_b():
+    return make_env(jax.random.PRNGKey(2), n_users=8, n_aps=2, n_sub=4)
+
+
+def test_recompile_count_cold_warm_cold(env_a, env_b):
+    """The regression the PR 3 weak-type fix bought, asserted exactly: a
+    cold plan compiles once, the first replan compiles once, and every
+    subsequent dispatch -- warm-on-warm, and a SECOND env of the same
+    shape through both paths -- reuses those two programs. Any third
+    entry in the log is a recompile leak."""
+    eng = _engine()
+    with compile_log() as log:
+        state = eng.plan(env_a)
+        state = eng.replan(state, env_a)
+        state = eng.replan(state, env_a)
+        s2 = eng.plan(env_b)
+        s2 = eng.replan(s2, env_b)
+        s2 = eng.replan(s2, env_b)
+        jax.block_until_ready(s2.plan.utility)
+    jax.block_until_ready(state.plan.utility)
+    assert log == ["plan", "replan"], log
+
+
+def test_compile_log_nested_sinks(env_a):
+    """Sinks stack: an inner log sees only its own window."""
+    eng = _engine()
+    with compile_log() as outer:
+        eng.plan(env_a)
+        with compile_log() as inner:
+            eng.plan(env_a)                       # cached: no compile
+            eng.replan(eng.plan(env_a), env_a)    # new kind: one compile
+        assert inner == ["replan"], inner
+    assert outer == ["plan", "replan"], outer
+
+
+def test_cache_key_discipline_clean(env_a):
+    env_c = make_env(jax.random.PRNGKey(3), n_users=6, n_aps=2, n_sub=4)
+    eng = _engine()
+    report = analysis.CacheKeyDiscipline().probe(eng, env_a, env_c)
+    assert report.ok, report.findings
+    # the probe restored the engine's tunables
+    assert eng.warm_rho_min == 0.5 and eng.cfg == CFG
+    # and the minted keys carry the full discipline tuple
+    for key in eng.cache_keys():
+        assert key[0] in {"plan", "replan"}
+        assert key[5] in {0.5, 0.25}              # warm_rho_min in the key
+
+
+class _GateBlindEngine(PlannerEngine):
+    """Deliberately broken: warm_rho_min is dropped from the cache key, so
+    retuning the gate on a live engine silently reuses the stale program --
+    exactly the defect CacheKeyDiscipline exists to catch."""
+
+    def _compiled(self, kind, env):
+        key = (kind, self._env_shape(env), self.cfg, self.method,
+               self.rounding, self.warm_moment_decay)
+        fn = self._cache.get(key)
+        if fn is None:
+            scratch, self._cache = self._cache, {}
+            try:
+                fn = super()._compiled(kind, env)
+            finally:
+                self._cache = scratch
+            self._cache[key] = fn
+        return fn
+
+
+def test_cache_key_discipline_flags_gate_blind_engine(env_a):
+    report = analysis.CacheKeyDiscipline().probe(
+        _GateBlindEngine(profiles.nin(), weights=make_weights(8), cfg=CFG),
+        env_a)
+    assert not report.ok
+    finding = report.findings[0]    # later steps cascade off the miss
+    assert finding.rule == "cache_key_discipline"
+    assert finding.detail["step"].startswith("warm_rho_min retune")
+    assert "minting" in finding.message
+
+
+def test_runtime_probe_clean(env_a, env_b):
+    report = analysis.runtime_probe(_engine(), env_a, env_b)
+    assert report.ok, report.findings
+
+
+@pytest.mark.parametrize("backend", ["einsum", "pallas_interpret"])
+def test_audit_engine_clean_both_backends(env_a, backend):
+    eng = _engine(sinr_backend=backend)
+    report = analysis.audit_engine(eng, env_a, fleet=2)
+    assert report.ok, report.findings
+    assert [p.split(":")[-1] for p in report.programs] == [
+        "plan", "replan", "replan_many"]
+    # einsum programs skip the memory-model rules; pallas programs run all
+    assert ("sparse_grid" in report.rules) == (backend != "einsum")
+
+
+def test_program_args_requires_prev_for_replan(env_a):
+    eng = _engine()
+    with pytest.raises(ValueError, match="prev"):
+        eng.program_args("replan", env_a)
+    # trace-only: eval_shape avals are enough to assemble the warm payload
+    cold = jax.eval_shape(eng.program("plan", env_a),
+                          *eng.program_args("plan", env_a))
+    args = eng.program_args("replan", env_a, prev=cold)
+    closed = analysis.trace(eng.program("replan", env_a), *args)
+    assert closed.out_avals

@@ -1,0 +1,210 @@
+"""Auditor self-tests: every rule in the repro.analysis catalog has a
+clean case (a conforming program passes) and a violating case (the defect
+is flagged with an actionable message), plus the visitor's derived-VMEM /
+analytic-model parity check that anchors VmemCeiling to the numbers
+tests/test_kernels.py budgets against."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.core import make_env
+from repro.kernels import ops
+from repro.kernels.noma_rates import dense_tile_count, vmem_block_bytes
+
+U, N, M = 8, 2, 4
+
+
+@pytest.fixture(scope="module")
+def env():
+    return make_env(jax.random.PRNGKey(0), n_users=U, n_aps=N, n_sub=M)
+
+
+@pytest.fixture(scope="module")
+def tx(env):
+    beta = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(M), (U,))
+    p = jax.random.uniform(jax.random.PRNGKey(2), (U,),
+                           minval=0.01, maxval=0.3)
+    return beta * p[:, None]
+
+
+def _kernel_fn(env, **blocks):
+    def f(t):
+        intra, inter = ops.noma_pairwise_up(env, t, interpret=True, **blocks)
+        return intra + inter
+    return f
+
+
+# ---------------------------------------------------------------------------
+# NoHostTransfer
+# ---------------------------------------------------------------------------
+def test_no_host_transfer_rule():
+    rule = analysis.NoHostTransfer()
+    assert analysis.audit(lambda x: x * 2.0, jnp.ones(3), rules=[rule]).ok
+
+    def leaky(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) + 1.0,
+            jax.ShapeDtypeStruct((3,), jnp.float32), x)
+        return y * 2.0
+
+    # jit-wrapped: the callback sits inside a pjit sub-jaxpr, proving the
+    # visitor recurses into call params rather than only scanning top level
+    bad = analysis.audit(jax.jit(leaky), jnp.ones(3), rules=[rule])
+    assert not bad.ok
+    assert bad.findings[0].rule == "no_host_transfer"
+    assert "host round-trip" in bad.findings[0].message
+    with pytest.raises(analysis.AuditError):
+        bad.raise_if_failed()
+
+
+# ---------------------------------------------------------------------------
+# NoPairwiseIntermediate / NoGatherAbove / NoPad3D
+# ---------------------------------------------------------------------------
+def test_no_pairwise_intermediate_rule(env, tx):
+    rule = analysis.NoPairwiseIntermediate(U)
+    # the kernel path streams the pairwise tensor; (BU, BV, BM) arithmetic
+    # inside the pallas body must NOT count as a materialization
+    assert analysis.audit(_kernel_fn(env), tx, rules=[rule]).ok
+
+    def materialized(g):  # (U, U, M) elementwise arithmetic
+        return jnp.sum(g * 2.0 + 1.0, axis=1)
+
+    bad = analysis.audit(materialized, jnp.ones((U, U, M)), rules=[rule])
+    assert len(bad.findings) >= 2      # mul and add both flagged
+    assert "backend='pallas'" in bad.findings[0].message
+    # leading batch dims (vmapped fleet programs) still flag
+    vbad = analysis.audit(jax.vmap(materialized),
+                          jnp.ones((3, U, U, M)), rules=[rule])
+    assert not vbad.ok
+
+
+def test_no_gather_above_rule(env, tx):
+    rule = analysis.NoGatherAbove(U)
+    assert analysis.audit(_kernel_fn(env), tx, rules=[rule]).ok
+
+    def gathered(g_up, ap):  # the g[:, ap, :] materialization li_gd dropped
+        return g_up[:, ap, :]
+
+    bad = analysis.audit(gathered, jnp.ones((U, N, M)),
+                         jnp.zeros((U,), jnp.int32), rules=[rule])
+    assert not bad.ok
+    assert "in-kernel" in bad.findings[0].message
+    # the own-gain (U, 1, M) take_along_axis stays below the bar
+    own = analysis.audit(
+        lambda g, ap: jnp.take_along_axis(g, ap[:, None, None], axis=1),
+        jnp.ones((U, N, M)), jnp.zeros((U,), jnp.int32), rules=[rule])
+    assert own.ok
+
+
+def test_no_pad_3d_rule(env, tx):
+    rule = analysis.NoPad3D()
+    assert analysis.audit(_kernel_fn(env), tx, rules=[rule]).ok
+    bad = analysis.audit(
+        lambda g: jnp.pad(g, ((0, 3), (0, 0), (0, 0))),
+        jnp.ones((U, N, M)), rules=[rule])
+    assert not bad.ok
+    assert "unpadded" in bad.findings[0].message
+    # rank-2 pads (e.g. beta padding in reference code) are not the target
+    assert analysis.audit(lambda b: jnp.pad(b, ((0, 3), (0, 0))),
+                          jnp.ones((U, M)), rules=[rule]).ok
+
+
+# ---------------------------------------------------------------------------
+# VmemCeiling + the derived/analytic parity that makes it trustworthy
+# ---------------------------------------------------------------------------
+def test_vmem_ceiling_rule(env, tx):
+    fn = _kernel_fn(env)
+    assert analysis.audit(fn, tx, rules=[analysis.VmemCeiling()]).ok
+    bad = analysis.audit(fn, tx, rules=[analysis.VmemCeiling(budget_bytes=64)])
+    assert not bad.ok
+    f = bad.findings[0]
+    assert f.rule == "vmem_ceiling" and "shrink" in f.message
+    assert f.detail["vmem_bytes"] > 64
+
+
+def test_derived_vmem_matches_analytic_model(env, tx):
+    """The visitor's per-block byte count (summed over the kernel body's
+    non-SMEM refs) must equal noma_rates.vmem_block_bytes for the same
+    blocks: the rule and the budget tests then share one ground truth."""
+    blocks = dict(block_u=8, block_v=8, block_m=4, block_n=2)
+    closed = analysis.trace(_kernel_fn(env, **blocks), tx)
+    pcs = analysis.pallas_calls(closed.jaxpr)
+    assert pcs, "no pallas_call in the kernel program"
+    derived = max(pc.vmem_bytes for pc in pcs)
+    analytic = vmem_block_bytes(8, 8, 4, 2, n_aps=env.n_aps,
+                                direction="fwd", uplink=True)
+    assert derived == analytic, (derived, analytic)
+
+
+# ---------------------------------------------------------------------------
+# SparseGrid
+# ---------------------------------------------------------------------------
+def test_sparse_grid_rule(env, tx):
+    fn = _kernel_fn(env)
+    expect = dense_tile_count(U, U)    # layout=None -> dense schedule
+    assert analysis.audit(fn, tx, rules=[analysis.SparseGrid(expect)]).ok
+
+    bad = analysis.audit(fn, tx, rules=[analysis.SparseGrid(expect + 5)])
+    assert not bad.ok
+    f = bad.findings[0]
+    assert f.rule == "sparse_grid" and "tile list" in f.message
+    assert f.detail["grid"][-1] == expect
+
+    # a program with no tile-driven kernel at all: flagged when required,
+    # tolerated when not (einsum reference programs)
+    no_kernel = analysis.audit(lambda x: x * 2.0, jnp.ones(3),
+                               rules=[analysis.SparseGrid(expect)])
+    assert not no_kernel.ok
+    assert "no tile-driven" in no_kernel.findings[0].message
+    assert analysis.audit(
+        lambda x: x * 2.0, jnp.ones(3),
+        rules=[analysis.SparseGrid(expect, require=False)]).ok
+
+
+# ---------------------------------------------------------------------------
+# StableSignature
+# ---------------------------------------------------------------------------
+def test_stable_signature_rule():
+    rule = analysis.StableSignature()
+    assert analysis.audit(lambda x: x * 2.0, jnp.ones(3), rules=[rule]).ok
+    # python-scalar select: the classic weak-f32 producer (the PR 3 bug
+    # shape -- a weak leaf in cold output re-traces the warm program)
+    bad = analysis.audit(lambda x: jnp.where(x > 0, 1.0, 0.0),
+                         jnp.ones(3), rules=[rule])
+    assert not bad.ok
+    assert "weak-typed" in bad.findings[0].message
+    assert "_strong_typed" in bad.findings[0].message
+
+
+def test_stable_signature_compare():
+    a = jax.eval_shape(lambda x: (x, x.sum()), jnp.ones((4, 2)))
+    same = analysis.StableSignature.compare("t", a, a)
+    assert same == []
+    b = jax.eval_shape(lambda x: (x, x.sum().astype(jnp.int32)),
+                       jnp.ones((4, 2)))
+    diff = analysis.StableSignature.compare("t", a, b)
+    assert diff and "recompile every epoch" in diff[0].message
+    # tree-structure drift is its own finding, not a zip truncation
+    c = jax.eval_shape(lambda x: (x,), jnp.ones((4, 2)))
+    assert analysis.StableSignature.compare("t", a, c)
+
+
+# ---------------------------------------------------------------------------
+# catalog plumbing
+# ---------------------------------------------------------------------------
+def test_catalog_describe_and_report_roundtrip():
+    for cls in analysis.CATALOG:
+        assert cls.name != "rule"
+        doc = (cls.__doc__ or "").strip()
+        assert doc, f"{cls.__name__} has no docstring for describe()"
+    bad = analysis.audit(lambda x: jnp.where(x > 0, 1.0, 0.0), jnp.ones(3),
+                         rules=[analysis.StableSignature()],
+                         label="weak_program")
+    d = bad.to_dict()
+    assert d["ok"] is False and d["programs"] == ["weak_program"]
+    f = d["findings"][0]
+    assert f["rule"] == "stable_signature"
+    assert f["program"] == "weak_program"
+    assert str(bad.findings[0]).startswith("[stable_signature] weak_program")

@@ -157,38 +157,21 @@ def test_cell_tiles_counts_sum_of_cell_sizes():
     assert (np.diff(tu) >= 0).all()
 
 
-def _intra_grid_sizes(fn, *args):
-    """Grid tuples of every pallas_call in fn's jaxpr (the intra kernel is
-    the only 2D grid: (NM, T))."""
-    grids = []
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                grids.append(tuple(eqn.params["grid_mapping"].grid))
-            for p in eqn.params.values():
-                vals = p if isinstance(p, (tuple, list)) else [p]
-                for sub in vals:
-                    if isinstance(sub, jax.core.ClosedJaxpr):
-                        walk(sub.jaxpr)
-                    elif isinstance(sub, jax.core.Jaxpr):
-                        walk(sub)
-
-    walk(jax.make_jaxpr(fn)(*args).jaxpr)
-    return grids
-
-
 def test_intra_grid_scales_with_cell_sizes_not_u_squared():
-    """The structural acceptance criterion, proven from the LOWERED jaxpr:
-    with U=32 in eight 4-user cells (block 4), the intra pallas grid is
-    (NM, 8) -- one diagonal tile per cell -- while the dense (no-layout)
+    """The structural acceptance criterion, proven from the LOWERED jaxpr
+    via the analysis.SparseGrid rule (the grid walker that used to live
+    here): with U=32 in eight 4-user cells (block 4), the intra pallas grid
+    is (NM, 8) -- one diagonal tile per cell -- while the dense (no-layout)
     schedule launches (NM, 64) = (U/BU)^2 tiles. The grid shape is what the
     hardware executes; sum-of-cell-sizes^2 vs U^2 is read off directly."""
+    from repro import analysis
+
     u, n, m = 32, 8, 8
     ap = np.repeat(np.arange(8, dtype=np.int32), 4)
     env, beta, p_up, _ = _case(u, n, m, seed=2, ap=ap)
     layout = build_cell_layout(env, block_u=4, block_v=4)
     assert layout.n_tiles == 8                # sum of (c/4)^2 = 8 * 1
+    assert layout.dense_n_tiles() == (u // 4) ** 2
 
     tx = beta * p_up[:, None]
 
@@ -199,24 +182,28 @@ def test_intra_grid_scales_with_cell_sizes_not_u_squared():
                 layout=layout if with_layout else None)
         return f
 
-    sparse = _intra_grid_sizes(fwd(True), tx)
-    dense = _intra_grid_sizes(fwd(False), tx)
-    # intra kernel = the unique 2D grid in each program
-    sp = [g for g in sparse if len(g) == 2]
-    dn = [g for g in dense if len(g) == 2]
-    assert sp and dn, (sparse, dense)
-    assert sp[0][1] == 8, sp                  # sum-of-cell-sizes^2 tiles
-    assert dn[0][1] == (u // 4) ** 2, dn      # U^2 tiles without layout
+    # sum-of-cell-sizes^2 tiles with the layout...
+    analysis.audit(fwd(True), tx, rules=[analysis.SparseGrid(8)],
+                   label="pairwise:sparse").raise_if_failed()
+    # ...and the dense schedule launches (U/BU)^2, so the same rule must
+    # flag it against the cell-driven expectation (positive control)
+    dense_report = analysis.audit(fwd(False), tx,
+                                  rules=[analysis.SparseGrid(8)],
+                                  label="pairwise:dense")
+    assert not dense_report.ok, "dense schedule passed the sparse-grid rule"
+    analysis.audit(fwd(False), tx,
+                   rules=[analysis.SparseGrid(layout.dense_n_tiles())],
+                   label="pairwise:dense").raise_if_failed()
 
-    # backward follows the same layout: grad jaxpr's 2D grids are all
-    # tile-list sized, never (U/BU)^2
+    # backward follows the same layout: every intra kernel in the grad
+    # jaxpr (fwd + bwd) is tile-list sized, never (U/BU)^2
     def loss(t):
         i, x = ops.noma_pairwise_up(env, t, interpret=True, block_u=4,
                                     block_v=4, block_m=8, layout=layout)
         return jnp.sum(i) + jnp.sum(x)
 
-    ggrids = [g for g in _intra_grid_sizes(jax.grad(loss), tx) if len(g) == 2]
-    assert ggrids and all(g[1] == 8 for g in ggrids), ggrids
+    analysis.audit(jax.grad(loss), tx, rules=[analysis.SparseGrid(8)],
+                   label="pairwise:grad").raise_if_failed()
 
 
 def test_layout_block_mismatch_raises():

@@ -4,7 +4,6 @@ mode) on both links, under independent receiver/interferer padding
 (block_u != block_v), and for both SIC orders -- and the pallas-backed
 grad step must not materialize any (U, V, M) arithmetic intermediate."""
 import jax
-import jax.core
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -143,58 +142,16 @@ def test_downlink_rates_wrapper_parity(small_env):
 
 
 # ---------------------------------------------------------------------------
-# jaxpr discipline: the pallas-backed grad step must not compute through any
-# (U, V, M) arithmetic intermediate -- that tensor only streams through the
-# kernels block by block -- must not gather a (V, U, M) AP-indexed gain
-# (the gather-free kernels select the AP in-kernel from the raw (U, N, M)
-# state), and must not pad any kernel operand (boundary blocks are masked
-# in-kernel, so the gain and every other input enter pallas_call unpadded).
+# jaxpr discipline, via the repro.analysis rule catalog (the walkers that
+# used to live here are now NoPairwiseIntermediate / NoGatherAbove / NoPad3D
+# in analysis/rules.py -- tests, CLI, and CI all run one implementation):
+# the pallas-backed grad step must not compute through any (U, V, M)
+# arithmetic intermediate, must not gather a (V, U, M) AP-indexed gain, and
+# must not pad any kernel operand.
 # ---------------------------------------------------------------------------
-_ARITH = {"mul", "add", "sub", "div", "select_n", "lt", "gt", "le", "ge",
-          "and", "or", "max", "min", "log1p", "exp", "integer_pow", "pow"}
-
-
-def _subjaxprs(param):
-    vals = param if isinstance(param, (tuple, list)) else [param]
-    for p in vals:
-        if isinstance(p, jax.core.ClosedJaxpr):
-            yield p.jaxpr
-        elif isinstance(p, jax.core.Jaxpr):
-            yield p
-
-
-def _walk_eqns(jaxpr, n_users, arith, gathers, pads):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            # The kernel body works on (BU, BV, BM) VMEM blocks; at toy
-            # scale those can numerically equal (U, V, M) but are streamed,
-            # not materialized.
-            continue
-        for param in eqn.params.values():
-            for sub in _subjaxprs(param):
-                _walk_eqns(sub, n_users, arith, gathers, pads)
-        shapes = [getattr(v.aval, "shape", ()) for v in eqn.outvars]
-        if eqn.primitive.name == "pad":
-            # No kernel operand is padded any more; 3D pads would be the
-            # gain (the largest input and the one the issue gates on).
-            for shp in shapes:
-                if len(shp) >= 3:
-                    pads.append((eqn.primitive.name, shp))
-        if eqn.primitive.name == "gather":
-            # The own-gain take_along_axis produces (U, 1, M); a pairwise
-            # (>=U, >=U, M) gather is the g[:, ap, :] materialization.
-            for shp in shapes:
-                if (len(shp) == 3 and shp[0] >= n_users
-                        and shp[1] >= n_users):
-                    gathers.append((eqn.primitive.name, shp))
-        if eqn.primitive.name not in _ARITH:
-            continue
-        for shp in shapes:
-            if len(shp) == 3 and shp[0] >= n_users and shp[1] >= n_users:
-                arith.append((eqn.primitive.name, shp))
-
-
 def test_no_pairwise_intermediate_in_pallas_grad_jaxpr():
+    from repro import analysis
+
     u, n, m = 10, 3, 6
     env = make_env(jax.random.PRNGKey(0), n_users=u, n_aps=n, n_sub=m)
     prof = profiles.nin()
@@ -207,15 +164,16 @@ def test_no_pairwise_intermediate_in_pallas_grad_jaxpr():
         return jax.grad(
             lambda v: utility(env, prof, jnp.int32(2), v, w, backend=backend))
 
-    flagged = {}
-    for backend in ("einsum", "pallas_interpret"):
-        arith, gathers, pads = [], [], []
-        _walk_eqns(jax.make_jaxpr(grad_step(backend))(v0).jaxpr,
-                   u, arith, gathers, pads)
-        flagged[backend] = (arith, gathers, pads)
+    rules = [analysis.NoPairwiseIntermediate(u), analysis.NoGatherAbove(u),
+             analysis.NoPad3D()]
+    reports = {
+        backend: analysis.audit(grad_step(backend), v0, rules=rules,
+                                label=f"grad_step:{backend}")
+        for backend in ("einsum", "pallas_interpret")
+    }
     # positive control: the einsum grad does materialize pairwise tensors
-    assert len(flagged["einsum"][0]) >= 2, flagged["einsum"]
-    arith, gathers, pads = flagged["pallas_interpret"]
-    assert arith == [], arith
-    assert gathers == [], gathers    # no g[:, ap, :] (V, U, M) gather
-    assert pads == [], pads          # no _pad_to copy of the gain operand
+    einsum_arith = [f for f in reports["einsum"].findings
+                    if f.rule == "no_pairwise_intermediate"]
+    assert len(einsum_arith) >= 2, reports["einsum"].findings
+    # the pallas grad step is clean under all three rules
+    reports["pallas_interpret"].raise_if_failed()
