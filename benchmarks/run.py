@@ -58,6 +58,7 @@ def main() -> None:
     from benchmarks import (
         kernel_bench,
         ligd_properties,
+        online_serve,
         paper_common,
         paper_fig2_3,
         paper_fig4_5,
@@ -73,6 +74,7 @@ def main() -> None:
         "ligd_properties": ligd_properties.run,
         "kernel_bench": kernel_bench.run,
         "roofline": roofline_report.run,
+        "online_serve": online_serve.run,
     }
     chosen = (args.only.split(",") if args.only else list(all_benches))
     t0 = time.time()

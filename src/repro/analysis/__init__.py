@@ -16,6 +16,12 @@ from repro.analysis.engine_audit import (  # noqa: F401
     engine_rules,
     runtime_probe,
 )
+from repro.analysis.online_audit import (  # noqa: F401
+    audit_online,
+    audit_online_replan,
+    online_feedback_probe,
+    online_loop_probe,
+)
 from repro.analysis.report import (  # noqa: F401
     AuditError,
     AuditReport,

@@ -25,6 +25,11 @@ from repro.analysis.engine_audit import (
     audit_engine,
     runtime_probe,
 )
+from repro.analysis.online_audit import (
+    audit_online_replan,
+    online_feedback_probe,
+    online_loop_probe,
+)
 from repro.analysis.report import AuditReport
 from repro.core import make_env, make_weights, profiles
 from repro.core.types import GdConfig
@@ -75,8 +80,12 @@ def main(argv: list[str] | None = None) -> int:
             label = f"{preset}/{backend}"
             report.merge(audit_engine(engine, env, fleet=args.fleet,
                                       label=label))
-            print(f"audited {label}: plan/replan/replan_many "
-                  f"({len(report.findings)} finding(s) so far)")
+            # the closed-loop feedback path: replan with a measured-profile
+            # operand must satisfy the same rules with the same signature
+            report.merge(audit_online_replan(engine, env, label=label))
+            print(f"audited {label}: plan/replan/replan_many/"
+                  f"replan_measured ({len(report.findings)} finding(s) "
+                  "so far)")
 
     if not args.no_runtime:
         # Live probes run on a small env (they execute the solver); the
@@ -90,7 +99,12 @@ def main(argv: list[str] | None = None) -> int:
         cache_eng = PlannerEngine(prof, weights=make_weights(8), cfg=cfg)
         report.merge(CacheKeyDiscipline().probe(cache_eng, env_a, env_c,
                                                 label="runtime"))
-        print("ran runtime probes (compile log, transfer guard, cache keys)")
+        online_eng = PlannerEngine(prof, weights=make_weights(8), cfg=cfg)
+        report.merge(online_feedback_probe(online_eng, env_a,
+                                           label="runtime"))
+        report.merge(online_loop_probe(label="runtime"))
+        print("ran runtime probes (compile log, transfer guard, cache "
+              "keys, online feedback, online loop)")
 
     payload = report.to_dict()
     payload["presets"] = list(args.presets)

@@ -6,6 +6,7 @@ from repro.core.types import (  # noqa: F401
     GdVars,
     ModelProfile,
     NetworkEnv,
+    ProfileShapeError,
     RadioConstants,
     SplitPlan,
     lam,

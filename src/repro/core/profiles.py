@@ -1,10 +1,19 @@
 """Model profiles: per-layer FLOPs + inter-layer activation sizes.
 
-Two sources:
+Three sources:
   * chain CNNs the paper evaluates (NiN-9, YOLOv2-17, VGG16-24), built from
     real conv arithmetic (MACs, feature-map sizes) on CIFAR-scale inputs;
   * any assigned LM architecture config (per-transformer-block profile), so
-    the ECC planner applies to all 10 assigned archs (DESIGN.md Sec. 5).
+    the ECC planner applies to all 10 assigned archs (DESIGN.md Sec. 5);
+  * *measured* profiles produced by the closed-loop serving telemetry
+    (repro.online.telemetry): EMA-smoothed effective per-layer costs under
+    live traffic, rebuilt every feedback epoch via ``ModelProfile.like`` so
+    they are shape-, dtype-, and name-compatible with the static profile
+    here and hit the planner's already-compiled programs as plain operands.
+    The static profiles below are both the planner's prior and the
+    telemetry accumulator's initial state; ``ModelProfile.validate_like``
+    enforces the contract once at loop start (clear layer-count error
+    instead of a recompile or a failure inside a jitted trace).
 
 Layer enumeration follows the paper's stated counts (NiN 9 / YOLOv2 17 /
 VGG16 24): ReLUs are folded into their producing layer; VGG pools, flatten

@@ -119,6 +119,12 @@ class NetworkEnv:
         return self.ap[:, None] == self.ap[None, :]
 
 
+class ProfileShapeError(ValueError):
+    """A measured (or otherwise substituted) profile does not match the
+    static profile's layer structure; raised at loop start instead of
+    failing opaquely inside a jitted planner trace."""
+
+
 @_register
 @dataclasses.dataclass(frozen=True)
 class ModelProfile:
@@ -139,6 +145,52 @@ class ModelProfile:
     @property
     def n_layers(self) -> int:
         return self.fl.shape[0]
+
+    def validate_like(self, other: "ModelProfile") -> "ModelProfile":
+        """Check that ``other`` is drop-in compatible with this profile:
+        same layer count, same array shapes/dtypes, and the same static
+        name (the name is pytree *metadata*, so a renamed profile would
+        silently recompile every planner program that takes it as an
+        operand). Returns ``other`` on success; raises ProfileShapeError
+        with the offending field named otherwise. Measured-profile loops
+        call this once at loop start."""
+        if other.n_layers != self.n_layers:
+            raise ProfileShapeError(
+                f"measured profile has {other.n_layers} layers but the "
+                f"static profile '{self.name}' has {self.n_layers}; the "
+                "telemetry accumulator must be built from the profile the "
+                "planner was constructed with (ModelProfile.like)")
+        for field in ("fl", "w", "m_down"):
+            a, b = getattr(self, field), getattr(other, field)
+            if tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype:
+                raise ProfileShapeError(
+                    f"measured profile field '{field}' is "
+                    f"{tuple(b.shape)}/{b.dtype} but the static profile "
+                    f"'{self.name}' expects {tuple(a.shape)}/{a.dtype}; "
+                    "a mismatched operand would recompile (or fail inside) "
+                    "every compiled planner program")
+        if other.name != self.name:
+            raise ProfileShapeError(
+                f"measured profile is named {other.name!r} but the static "
+                f"profile is {self.name!r}; the name is static pytree "
+                "metadata, so a rename mints a new jit signature and "
+                "recompiles every planner program -- build measured "
+                "profiles with ModelProfile.like, which preserves it")
+        return other
+
+    def like(self, fl: Array, w: Array, m_down: Array) -> "ModelProfile":
+        """A profile with this profile's name and layer structure but new
+        per-layer tables (e.g. measured/EMA-smoothed ones). Values are cast
+        to the static tables' dtypes (strong-typed: a weak-f32 leaf would
+        re-trace the planner once per feedback epoch); shapes are validated
+        so a mismatch fails here, not inside a jitted planner trace."""
+        made = ModelProfile(
+            fl=jnp.asarray(fl, self.fl.dtype),
+            w=jnp.asarray(w, self.w.dtype),
+            m_down=jnp.asarray(m_down, self.m_down.dtype),
+            name=self.name,
+        )
+        return self.validate_like(made)
 
     def prefix_flops(self) -> Array:
         """device-side FLOPs for split s = 0..F  (shape F+1)."""

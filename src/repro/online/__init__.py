@@ -1,0 +1,37 @@
+"""Closed-loop online serving: request streams, continuous batching,
+measured-profile telemetry, and a QoS monitor that drives the planner --
+the ECC planner operating on live traffic instead of static profiles."""
+from repro.online.streams import (  # noqa: F401
+    RequestStream,
+    StreamConfig,
+    StreamState,
+    stream_step,
+)
+from repro.online.batcher import (  # noqa: F401
+    BatchState,
+    Completions,
+    ContinuousBatcher,
+    DecodeBatcher,
+    EdgeBatcher,
+    slot_update,
+    slot_where,
+)
+from repro.online.telemetry import (  # noqa: F401
+    Observation,
+    Telemetry,
+    TelemetryState,
+    measured_profile,
+    telemetry_update,
+)
+from repro.online.qos import (  # noqa: F401
+    QosConfig,
+    QosMonitor,
+    QosReport,
+    QosState,
+    qos_update,
+)
+from repro.online.loop import (  # noqa: F401
+    EpochOut,
+    OnlineLoop,
+    ServiceConfig,
+)

@@ -1,0 +1,286 @@
+"""The closed loop: streams -> batcher -> telemetry -> QoS -> planner.
+
+One epoch of online serving is ONE compiled program (`kind "online_epoch"`
+in planning.compile_log) plus one host decision point:
+
+  device (compiled, state donated in place):
+    1. scenario.step/env      -- mobility + fading advance, env materializes
+    2. streams.stream_step    -- per-user Poisson arrivals for the epoch
+    3. service model          -- per-user end-to-end seconds under the
+                                 *current* plan and the measured edge
+                                 congestion (occupancy + backlog inflate the
+                                 suffix compute), plus the per-layer
+                                 Observation the telemetry folds in
+    4. batcher enqueue/admit/tick -- continuous batching; completions out
+    5. qos_update             -- percentiles, miss EMAs, trigger bool
+    6. telemetry_update       -- measured profile EMA
+
+  host (per epoch):
+    - read the QoS trigger (one scalar sync, the loop's decision point)
+    - OnlineSplitServer.observe(env, prof=measured, force=trigger): replan
+      on schedule or on trigger; its one sync is s* (the re-cut decision)
+
+Because the plan enters the epoch program as a SplitPlan operand and the
+measured profile enters the planner as a ModelProfile operand (same avals
+every epoch -- planning._strong_typed + ModelProfile.like), a steady-state
+episode compiles each program exactly once and moves no arrays to host
+beyond the two decision scalars. Both properties are machine-checked:
+planning.compile_log in tests, repro.analysis.online_audit in CI.
+
+The service model is where the closed loop earns its keep: the edge's
+effective speed degrades with load (`1 + load_gain * (occupancy + backlog)
+/ capacity`), which the *static* profile cannot see. The telemetry
+attributes the inflated suffix times back into effective FLOPs, the
+measured profile makes the planner price edge compute honestly, and s*
+rises (keep more layers on device) exactly when the edge saturates --
+the requests/sec-vs-concurrency benchmark (benchmarks/online_serve.py)
+demonstrates the divergence from the static-profile plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel
+from repro.core.types import Array, ModelProfile, SplitPlan, lam
+from repro.planning.engine import _recorded
+from repro.runtime.serve import OnlineSplitServer
+from repro.online import batcher as batcherlib
+from repro.online.batcher import BatchState, ContinuousBatcher
+from repro.online.qos import QosConfig, QosMonitor, QosReport, QosState, qos_update
+from repro.online.streams import RequestStream, StreamConfig, StreamState, stream_step
+from repro.online.telemetry import (
+    Observation,
+    Telemetry,
+    TelemetryState,
+    telemetry_update,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Edge service knobs. ``edge_capacity`` is the continuous batch size B;
+    ``queue_depth`` the admission ring; ``load_gain`` how hard contention
+    degrades the edge (effective suffix cost scales by ``1 + load_gain *
+    (occupancy + backlog) / capacity`` -- 0 makes the edge ideal and the
+    closed loop converges to the static plan); ``replan_every`` the
+    scheduled replan cadence in epochs; ``max_work_epochs`` caps one
+    request's slot occupancy."""
+
+    edge_capacity: int = 8
+    queue_depth: int = 32
+    load_gain: float = 0.0
+    replan_every: int = 10
+    telemetry_decay: float = 0.9
+    max_work_epochs: int = 1000
+
+
+class EpochOut(NamedTuple):
+    """Device-resident per-epoch outputs handed back to the host loop."""
+
+    env: object          # NetworkEnv of the new epoch (the replan operand)
+    report: QosReport
+    counts: Array        # (U,) arrivals this epoch
+    completed: Array     # () int32 completions this epoch
+    occupancy: Array     # () int32 active slots after the tick
+    backlog: Array       # () int32 queued requests after the tick
+    congestion: Array    # () f32 edge slowdown factor used this epoch
+
+
+class OnlineLoop:
+    """Closed-loop serving over one time-evolving scenario.
+
+    feedback=True plans against the telemetry's measured profile;
+    feedback=False is the open-loop control (static profile), same epochs,
+    same traffic -- the benchmark's comparison arm."""
+
+    def __init__(self, scenario, engine, stream_cfg: StreamConfig,
+                 service_cfg: ServiceConfig = ServiceConfig(),
+                 qos_cfg: QosConfig | None = None,
+                 model=None, params=None, feedback: bool = True):
+        u = scenario.cfg.n_users
+        self.scenario = scenario
+        self.engine = engine
+        self.stream_cfg = stream_cfg
+        self.service_cfg = service_cfg
+        self.qos_cfg = qos_cfg or QosConfig(deadline_s=stream_cfg.deadline_s)
+        self.feedback = bool(feedback)
+        self.stream = RequestStream(stream_cfg, u)
+        self.batcher = ContinuousBatcher(
+            service_cfg.edge_capacity, service_cfg.queue_depth,
+            stream_cfg.max_per_user_epoch)
+        self.qos = QosMonitor(self.qos_cfg, u)
+        self.telemetry = Telemetry(engine.prof, scenario.cfg.comp,
+                                   service_cfg.telemetry_decay)
+        self.server = OnlineSplitServer(engine, model, params,
+                                        replan_every=service_cfg.replan_every)
+        # episode state (device pytrees), populated by reset()
+        self._sc = self._st = self._bt = self._qs = self._tel = None
+        self._plan: SplitPlan | None = None
+        self._key: jax.Array | None = None
+
+    # -- the compiled epoch program ---------------------------------------
+    def _service_and_observation(self, env, plan: SplitPlan,
+                                 congestion: Array):
+        """Per-user modeled service seconds + the telemetry Observation,
+        both priced at the *discrete* plan (one-hot subchannels, planned
+        powers/compute units) with the measured congestion inflating the
+        edge suffix. The static profile is the simulator's ground truth."""
+        prof, comp = self.engine.prof, self.scenario.cfg.comp
+        s = plan.s
+        pre = prof.prefix_flops()[s]
+        suf = prof.suffix_flops()[s]
+        beta_up = jax.nn.one_hot(plan.sub_up, env.n_sub, dtype=env.g_up.dtype)
+        beta_dn = jax.nn.one_hot(plan.sub_dn, env.n_sub, dtype=env.g_up.dtype)
+        r_up = jnp.maximum(
+            jnp.sum(channel.uplink_rates(env, beta_up, plan.p_up), -1), 1e-9)
+        r_dn = jnp.maximum(
+            jnp.sum(channel.downlink_rates(env, beta_dn, plan.p_dn), -1), 1e-9)
+        speed_edge = lam(plan.r, comp) * comp.c_min_edge
+        t_dev = pre / comp.c_device
+        t_up = prof.w[s] / r_up
+        t_edge = suf * congestion / speed_edge
+        t_dn = prof.m_down[s] / r_dn
+        service = t_dev + t_up + t_edge + t_dn                     # (U,)
+
+        f = prof.n_layers
+        r_mean = jnp.mean(plan.r)
+        on_device = jnp.arange(f) < s
+        t_layer = jnp.where(
+            on_device, prof.fl / comp.c_device,
+            prof.fl * congestion / (lam(r_mean, comp) * comp.c_min_edge))
+        rate_mean = jnp.mean(r_up)
+        obs = Observation(t_layer=t_layer,
+                          t_up=prof.w[s] / rate_mean,
+                          rate_up=rate_mean,
+                          rate_dn=jnp.mean(r_dn),
+                          r_units=r_mean)
+        return service, obs
+
+    @functools.cached_property
+    def _epoch(self):
+        scen, svc = self.scenario, self.service_cfg
+        stream_cfg, qos_cfg = self.stream_cfg, self.qos_cfg
+        comp_consts = scen.cfg.comp
+        dt = stream_cfg.epoch_dt_s
+        cap = float(svc.edge_capacity)
+        n_users = scen.cfg.n_users
+
+        def epoch(base_key, plan: SplitPlan, sc, st: StreamState,
+                  bt: BatchState, qs: QosState, tel: TelemetryState):
+            k_sc = jax.random.fold_in(jax.random.fold_in(base_key, st.epoch),
+                                      1)
+            sc = scen.step(k_sc, sc)
+            env = scen.env(sc)
+            st, counts = stream_step(stream_cfg, n_users, base_key, st)
+            # Congestion from the load the edge is already carrying when
+            # this epoch's work lands.
+            load = (batcherlib.occupancy(bt) + batcherlib.backlog(bt)
+                    ).astype(jnp.float32)
+            congestion = 1.0 + svc.load_gain * load / cap
+            service, obs = self._service_and_observation(env, plan,
+                                                         congestion)
+            work = jnp.clip(jnp.ceil(service / dt).astype(jnp.int32), 1,
+                            svc.max_work_epochs)
+            now = st.epoch.astype(jnp.float32) * dt
+            bt = batcherlib.enqueue(bt, counts, now,
+                                    stream_cfg.max_per_user_epoch)
+            bt = batcherlib.admit(bt, now, service, work)
+            bt, comps = batcherlib.tick(bt)
+            qs, report = qos_update(qos_cfg, qs, comps)
+            tel = telemetry_update(comp_consts, svc.telemetry_decay,
+                                   self.engine.prof.fl, tel, plan.s, obs)
+            out = EpochOut(env=env, report=report, counts=counts,
+                           completed=jnp.sum(comps.valid).astype(jnp.int32),
+                           occupancy=batcherlib.occupancy(bt),
+                           backlog=batcherlib.backlog(bt),
+                           congestion=congestion)
+            return sc, st, bt, qs, tel, out
+
+        # _recorded: each trace of the epoch program logs "online_epoch" to
+        # planning.compile_log sinks -- the steady-state compile-once
+        # property is asserted against this, exactly like the engine kinds.
+        return jax.jit(_recorded(epoch, "online_epoch"),
+                       donate_argnums=(2, 3, 4, 5, 6))
+
+    # -- episode driving ---------------------------------------------------
+    def reset(self, key: jax.Array) -> None:
+        """Initialize scenario/stream/batch/QoS/telemetry state and take the
+        initial (cold) plan. The telemetry starts at the static profile, so
+        feedback and static arms are identical until load appears."""
+        k_sc, k_st, self._key = jax.random.split(key, 3)
+        self._sc = self.scenario.init(k_sc)
+        self._st = self.stream.init(k_st)
+        self._bt = self.batcher.init()
+        self._qs = self.qos.init()
+        self._tel = self.telemetry.init()
+        env0 = self.scenario.env(self._sc)
+        self.server.observe(env0)          # epoch 0 is always scheduled
+        self._plan = self.server.state.plan
+
+    def measured_profile(self) -> ModelProfile:
+        """The telemetry's current measured profile (a planner operand)."""
+        return self.telemetry.profile(self._tel)
+
+    def step_epoch(self) -> tuple[EpochOut, bool]:
+        """One closed-loop epoch. Returns the device-resident EpochOut and
+        whether a QoS trigger forced an off-schedule replan (the host-side
+        decision read)."""
+        (self._sc, self._st, self._bt, self._qs, self._tel,
+         out) = self._epoch(self._key, self._plan, self._sc, self._st,
+                            self._bt, self._qs, self._tel)
+        trigger = bool(out.report.trigger)   # the per-epoch decision sync
+        prof = self.measured_profile() if self.feedback else None
+        self.server.observe(out.env, prof=prof, force=trigger)
+        self._plan = self.server.state.plan
+        return out, trigger
+
+    def run(self, key: jax.Array, n_epochs: int,
+            record: bool = False) -> dict:
+        """Drive a fresh episode for ``n_epochs``. With record=True, per-
+        epoch scalars are pulled to host for analysis (benchmark mode; the
+        steady-state no-transfer property is audited with record=False).
+        Returns summary metrics (and, when recording, the trajectory)."""
+        self.reset(key)
+        hist: dict[str, list] = {k: [] for k in
+                                 ("s", "p50", "p95", "miss_rate", "occupancy",
+                                  "backlog", "completed", "congestion",
+                                  "trigger")}
+        for _ in range(n_epochs):
+            out, trigger = self.step_epoch()
+            if record:
+                hist["s"].append(int(self._plan.s))
+                hist["p50"].append(float(out.report.p50))
+                hist["p95"].append(float(out.report.p95))
+                hist["miss_rate"].append(float(out.report.miss_rate))
+                hist["occupancy"].append(int(out.occupancy))
+                hist["backlog"].append(int(out.backlog))
+                hist["completed"].append(int(out.completed))
+                hist["congestion"].append(float(out.congestion))
+                hist["trigger"].append(bool(trigger))
+        m = self.metrics()
+        if record:
+            m["history"] = hist
+        return m
+
+    def metrics(self) -> dict:
+        """End-of-episode summary. Syncs the episode counters once."""
+        m = dict(self.server.metrics())
+        m.update({
+            "offered": int(self._st.offered),
+            "completed": int(self._bt.completed),
+            "dropped": int(self._bt.dropped),
+            "served": int(self._qs.served),
+            "deadline_missed": int(self._qs.missed),
+            "qos_triggers": int(self._qs.triggers),
+            "epochs": int(self._st.epoch),
+            "duration_s": float(self._st.epoch) * self.stream_cfg.epoch_dt_s,
+        })
+        dur = max(m["duration_s"], 1e-9)
+        m["requests_per_s"] = m["completed"] / dur
+        m["offered_per_s"] = m["offered"] / dur
+        return m

@@ -1,0 +1,155 @@
+"""QoS monitor: latency percentiles + deadline misses -> replan trigger.
+
+Tracks completed-request latencies in a fixed-size ring (device-resident,
+donated in place) and maintains per-user deadline-miss EMAs. Every epoch it
+produces p50/p95 over the window and a *device boolean* trigger that fires
+when either percentile or the miss rate crosses its threshold; the closed
+loop reads that one scalar per epoch (mirroring the single s*-sync in
+OnlineSplitServer.observe) and, when set, forces a planner replan with the
+current measured profile. Hysteresis (``cooldown_epochs``) keeps a noisy
+boundary from re-triggering every epoch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+from repro.online.batcher import Completions
+
+
+@dataclasses.dataclass(frozen=True)
+class QosConfig:
+    """Thresholds are in seconds (percentiles) / fraction (miss rate).
+    ``window`` is the latency-ring depth; ``miss_decay`` the per-completion
+    EMA factor for per-user deadline misses."""
+
+    deadline_s: float = 0.5
+    p95_max_s: float = 0.5
+    p50_max_s: float = 0.25
+    miss_rate_max: float = 0.05
+    window: int = 256
+    miss_decay: float = 0.9
+    cooldown_epochs: int = 10
+
+
+class QosState(NamedTuple):
+    lat: Array        # (W,) latency ring
+    valid: Array      # (W,) bool: ring entry holds a real completion
+    head: Array       # () int32 next write position
+    miss: Array       # (U,) per-user deadline-miss EMA
+    served: Array     # () int32 completions seen
+    missed: Array     # () int32 deadline misses seen
+    cooldown: Array   # () int32 epochs until the trigger can re-fire
+    triggers: Array   # () int32 times the trigger fired
+
+
+class QosReport(NamedTuple):
+    """Per-epoch snapshot, all device scalars. ``trigger`` is the one value
+    the loop syncs to host."""
+
+    p50: Array
+    p95: Array
+    miss_rate: Array
+    trigger: Array    # () bool
+
+
+def qos_update(cfg: QosConfig, state: QosState,
+               comp: Completions) -> tuple[QosState, QosReport]:
+    """Pure one-epoch update (composable inside a larger jitted program)."""
+    w = state.lat.shape[0]
+
+    # Ring-write this epoch's completions (at most B of them).
+    def push(carry, x):
+        lat, valid, head = carry
+        is_valid, latency = x
+        lat = jnp.where(is_valid, lat.at[head % w].set(latency), lat)
+        valid = jnp.where(is_valid, valid.at[head % w].set(True), valid)
+        head = head + is_valid.astype(jnp.int32)
+        return (lat, valid, head), None
+
+    (lat, valid, head), _ = jax.lax.scan(
+        push, (state.lat, state.valid, state.head),
+        (comp.valid, comp.latency))
+
+    # Per-user deadline-miss EMA, one step per completing user.
+    late = comp.valid & (comp.latency > cfg.deadline_s)
+
+    def fold_miss(miss, x):
+        is_valid, uid, is_late = x
+        old = miss[uid]
+        new = cfg.miss_decay * old + (1.0 - cfg.miss_decay) * (
+            is_late.astype(jnp.float32))
+        return jnp.where(is_valid, miss.at[uid].set(new), miss), None
+
+    miss, _ = jax.lax.scan(fold_miss, state.miss,
+                           (comp.valid, jnp.maximum(comp.user, 0), late))
+
+    served = state.served + jnp.sum(comp.valid).astype(jnp.int32)
+    missed = state.missed + jnp.sum(late).astype(jnp.int32)
+
+    # Percentiles over valid ring entries only: invalid slots are pushed to
+    # +inf and the percentile rank is rescaled to the valid count
+    # (jnp.percentile has no mask argument).
+    n_valid = jnp.sum(valid)
+    filled = jnp.where(valid, lat, jnp.inf)
+    ranked = jnp.sort(filled)
+    frac = jnp.maximum(n_valid - 1, 0).astype(jnp.float32)
+    idx50 = jnp.round(0.50 * frac).astype(jnp.int32)
+    idx95 = jnp.round(0.95 * frac).astype(jnp.int32)
+    any_valid = n_valid > 0
+    p50 = jnp.where(any_valid, ranked[idx50], 0.0)
+    p95 = jnp.where(any_valid, ranked[idx95], 0.0)
+    miss_rate = jnp.where(
+        served > 0, missed.astype(jnp.float32) / jnp.maximum(served, 1), 0.0)
+
+    breach = any_valid & (
+        (p95 > cfg.p95_max_s) | (p50 > cfg.p50_max_s)
+        | (miss_rate > cfg.miss_rate_max))
+    armed = state.cooldown <= 0
+    trigger = breach & armed
+    cooldown = jnp.where(trigger, jnp.int32(cfg.cooldown_epochs),
+                         jnp.maximum(state.cooldown - 1, 0))
+
+    new = QosState(lat=lat, valid=valid, head=head, miss=miss, served=served,
+                   missed=missed, cooldown=cooldown,
+                   triggers=state.triggers + trigger.astype(jnp.int32))
+    return new, QosReport(p50=p50, p95=p95, miss_rate=miss_rate,
+                          trigger=trigger)
+
+
+class QosMonitor:
+    def __init__(self, cfg: QosConfig, n_users: int):
+        if cfg.window < 2:
+            raise ValueError(f"window must be >= 2, got {cfg.window}")
+        self.cfg = cfg
+        self.n_users = int(n_users)
+
+    def init(self) -> QosState:
+        w = self.cfg.window
+        return QosState(
+            lat=jnp.zeros((w,), jnp.float32),
+            valid=jnp.zeros((w,), bool),
+            head=jnp.int32(0),
+            miss=jnp.zeros((self.n_users,), jnp.float32),
+            served=jnp.int32(0),
+            missed=jnp.int32(0),
+            cooldown=jnp.int32(0),
+            triggers=jnp.int32(0),
+        )
+
+    @functools.cached_property
+    def _update(self):
+        return jax.jit(functools.partial(qos_update, self.cfg),
+                       donate_argnums=(0,))
+
+    def update(self, state: QosState,
+               comp: Completions) -> tuple[QosState, QosReport]:
+        """Fold one epoch's completions in; donates ``state`` in place."""
+        return self._update(state, comp)

@@ -1,0 +1,104 @@
+"""Request streams: per-user Poisson arrivals driving the closed loop.
+
+A RequestStream turns a time-evolving scenario population into per-epoch
+split-inference request traffic. Each user slot carries an independent
+Poisson arrival process (rate ``arrival_rate_hz`` while its *session* is
+active); sessions themselves churn with the same slot-replacement semantics
+as ``repro.scenarios.churn`` (a replaced slot is a user leaving and a new
+one joining mid-session), so offered load breathes the way a live cell's
+does while every array keeps its static (U,)/(U, K) shape.
+
+Everything is a compiled program over device-resident state: ``step``
+returns the per-user arrival counts for the epoch as device arrays, and the
+PRNG is deterministic per epoch (``jax.random.fold_in(base_key, epoch)``),
+so any epoch's traffic can be replayed without replaying the stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+from repro.scenarios import churn
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Traffic knobs. ``arrival_rate_hz`` is per *active* user; a request's
+    service demand is ``tokens_per_request`` edge decode steps; its deadline
+    is ``deadline_s`` after arrival. ``session_churn_hz`` replaces user
+    sessions wholesale (scenarios.churn slot-replacement semantics);
+    ``duty_cycle`` is the long-run fraction of sessions that are active.
+    ``max_per_user_epoch`` caps one slot's arrivals per epoch so downstream
+    queues can size statically."""
+
+    arrival_rate_hz: float = 4.0
+    epoch_dt_s: float = 0.1
+    tokens_per_request: int = 8
+    deadline_s: float = 0.5
+    session_churn_hz: float = 0.0
+    duty_cycle: float = 1.0
+    max_per_user_epoch: int = 4
+
+
+class StreamState(NamedTuple):
+    session: Array   # (U,) bool: slot currently running an active session
+    epoch: Array     # () int32
+    offered: Array   # () int32 total requests offered so far
+
+
+def stream_step(cfg: StreamConfig, n_users: int, base_key: jax.Array,
+                state: StreamState) -> tuple[StreamState, Array]:
+    """Pure one-epoch step (composable inside a larger jitted program).
+    Deterministic per-epoch stream: the epoch index, not a carried key,
+    drives the draw -- epoch t's traffic is replayable from (base_key, t)
+    alone."""
+    u = n_users
+    key = jax.random.fold_in(base_key, state.epoch)
+    k_arr, k_churn, k_fresh = jax.random.split(key, 3)
+    session = state.session
+    if cfg.session_churn_hz > 0.0:
+        replaced = churn.replacement_mask(
+            k_churn, u, cfg.session_churn_hz, cfg.epoch_dt_s)
+        fresh = jax.random.bernoulli(k_fresh, cfg.duty_cycle, (u,))
+        session = jnp.where(replaced, fresh, session)
+    lam = cfg.arrival_rate_hz * cfg.epoch_dt_s
+    counts = jax.random.poisson(k_arr, lam, (u,), dtype=jnp.int32)
+    counts = jnp.minimum(counts, cfg.max_per_user_epoch)
+    counts = jnp.where(session, counts, 0)
+    new = StreamState(session=session, epoch=state.epoch + 1,
+                      offered=state.offered + jnp.sum(counts))
+    return new, counts
+
+
+class RequestStream:
+    """Deterministic per-user Poisson request generator for U user slots."""
+
+    def __init__(self, cfg: StreamConfig, n_users: int):
+        if cfg.max_per_user_epoch < 1:
+            raise ValueError(
+                f"max_per_user_epoch must be >= 1, got {cfg.max_per_user_epoch}")
+        if not 0.0 < cfg.duty_cycle <= 1.0:
+            raise ValueError(f"duty_cycle must be in (0, 1], got {cfg.duty_cycle}")
+        self.cfg = cfg
+        self.n_users = int(n_users)
+
+    def init(self, key: jax.Array) -> StreamState:
+        active = jax.random.bernoulli(key, self.cfg.duty_cycle,
+                                      (self.n_users,))
+        return StreamState(session=active, epoch=jnp.int32(0),
+                           offered=jnp.int32(0))
+
+    @functools.cached_property
+    def _step(self):
+        return jax.jit(
+            functools.partial(stream_step, self.cfg, self.n_users))
+
+    def step(self, base_key: jax.Array,
+             state: StreamState) -> tuple[StreamState, Array]:
+        """Advance one epoch: (new state, per-user arrival counts (U,))."""
+        return self._step(base_key, state)

@@ -321,6 +321,24 @@ class PlannerEngine:
         (folded into cfg, hence into every cache key)."""
         return self.cfg.sinr_backend
 
+    def _prof_arg(self, prof: ModelProfile | None,
+                  sharded: bool = False) -> ModelProfile:
+        """The profile operand for one dispatch. ``prof`` overrides the
+        static profile with a *measured* one (repro.online telemetry): it is
+        validated against the static profile's layer structure, dtypes and
+        name here -- host metadata only, so a mismatch raises a clear
+        ProfileShapeError instead of recompiling (or failing inside) the
+        jitted solver. A compatible override hits the same compiled program:
+        the profile is an operand, never a trace constant."""
+        if prof is None:
+            return (self._prof_rep if sharded else self._prof)
+        self._prof.validate_like(prof)
+        if sharded:
+            # Replicate the override explicitly, as _w does for weights:
+            # sharded dispatch must not pay an implicit per-call reshard.
+            return jax.device_put(prof, NamedSharding(self.mesh, P()))
+        return prof
+
     def shard(self, mesh: Mesh | None) -> "PlannerEngine":
         """A twin of this engine whose fleet entry points run shard_map over
         `mesh` (None returns a plain vmapped twin). The compiled-program
@@ -412,24 +430,28 @@ class PlannerEngine:
 
     def program_args(self, kind: str, env: NetworkEnv,
                      prev: PlanState | None = None,
-                     weights: EccWeights | None = None) -> tuple:
+                     weights: EccWeights | None = None,
+                     prof: ModelProfile | None = None) -> tuple:
         """The positional argument tuple program(kind, env) is called with.
 
         ``env`` is a single environment for plan/replan and a stacked fleet
         for the *_many kinds; replan kinds need ``prev`` (a PlanState of
         arrays, or of ShapeDtypeStructs from jax.eval_shape for trace-only
-        audits -- the warm payload assembly is pure metadata in that case)."""
+        audits -- the warm payload assembly is pure metadata in that case).
+        ``prof`` substitutes a measured profile, exactly as the entry points
+        do (validated, same compiled program)."""
         many = "many" in kind
         nu = env.g_up.shape[1] if many else env.n_users
         w = self._w(env, weights, n_users=nu)
+        prof = self._prof_arg(prof)
         if kind.startswith("plan"):
-            return (env, self.prof, w)
+            return (env, prof, w)
         if prev is None:
             raise ValueError(
                 f"program_args({kind!r}) needs prev= (a PlanState or its "
                 "jax.eval_shape avals) to assemble the warm payload")
         norms, moms, steps, prev_gains = self._warm_args(prev, env.g_up)
-        return (env, self.prof, w, norms, moms, steps, prev_gains)
+        return (env, prof, w, norms, moms, steps, prev_gains)
 
     def _w(self, env: NetworkEnv, weights, n_users: int | None = None,
            sharded: bool = False) -> EccWeights:
@@ -462,14 +484,20 @@ class PlannerEngine:
             "for a fleet")
 
     # -- entry points ----------------------------------------------------
-    def plan(self, env: NetworkEnv, weights: EccWeights | None = None) -> PlanState:
-        """One-shot solve of a static environment."""
-        return self._compiled("plan", env)(env, self.prof, self._w(env, weights))
+    def plan(self, env: NetworkEnv, weights: EccWeights | None = None,
+             prof: ModelProfile | None = None) -> PlanState:
+        """One-shot solve of a static environment. ``prof`` substitutes a
+        measured profile (repro.online) for this dispatch: validated against
+        the static one, then passed as an operand to the *same* compiled
+        program -- closed-loop feedback never recompiles."""
+        return self._compiled("plan", env)(
+            env, self._prof_arg(prof), self._w(env, weights))
 
     def plan_many(
         self,
         envs: NetworkEnv | Sequence[NetworkEnv],
         weights: EccWeights | None = None,
+        prof: ModelProfile | None = None,
     ) -> PlanState:
         """Batched Monte-Carlo solve: `envs` is either a list of same-shape
         environments or a NetworkEnv whose array leaves carry a leading
@@ -490,9 +518,9 @@ class PlannerEngine:
             self._check_fleet_divisible(envs.g_up.shape[0])
             w = self._w(envs, weights, n_users=envs.g_up.shape[1], sharded=True)
             return self._compiled("plan_many_sharded", envs)(
-                envs, self._prof_rep, w)
+                envs, self._prof_arg(prof, sharded=True), w)
         w = self._w(envs, weights, n_users=envs.g_up.shape[1])
-        return self._compiled("plan_many", envs)(envs, self.prof, w)
+        return self._compiled("plan_many", envs)(envs, self._prof_arg(prof), w)
 
     # -- warm-start payload assembly (pure device ops, dispatches async) --
     def _warm_args(self, prev: PlanState, gains: Array):
@@ -515,6 +543,7 @@ class PlannerEngine:
         prev: PlanState | None,
         env: NetworkEnv,
         weights: EccWeights | None = None,
+        prof: ModelProfile | None = None,
     ) -> PlanState:
         """Online re-plan for the next epoch of a time-correlated scenario:
         every split point starts from the better of `prev.norms[s]` (resuming
@@ -525,9 +554,11 @@ class PlannerEngine:
         estimated epoch-to-epoch correlation is below `warm_rho_min` the
         temporal starts are disabled on device (use_warm=False -> exact cold
         Li-GD chain, same program). The call dispatches asynchronously --
-        shape validation below reads array metadata only."""
+        shape validation below reads array metadata only. ``prof``
+        substitutes a measured profile (repro.online feedback) as an operand
+        of the same compiled program."""
         if prev is None:
-            return self.plan(env, weights)
+            return self.plan(env, weights, prof=prof)
         fleet, warm_um = self._warm_dims(prev)
         if fleet is not None:
             raise WarmStateShapeError(
@@ -544,7 +575,8 @@ class PlannerEngine:
                 "after a shape change)")
         norms, moms, steps, prev_gains = self._warm_args(prev, env.g_up)
         return self._compiled("replan", env)(
-            env, self.prof, self._w(env, weights), norms, moms, steps, prev_gains
+            env, self._prof_arg(prof), self._w(env, weights), norms, moms,
+            steps, prev_gains
         )
 
     def replan_many(
@@ -552,6 +584,7 @@ class PlannerEngine:
         prev: PlanState | None,
         envs: NetworkEnv | Sequence[NetworkEnv],
         weights: EccWeights | None = None,
+        prof: ModelProfile | None = None,
     ) -> PlanState:
         """Fleet replan: scenarios evolving in parallel, all warm-started in
         one compiled program -- vmapped on one device, or shard_map over the
@@ -573,7 +606,7 @@ class PlannerEngine:
                 f"got {tuple(envs.g_up.shape)} -- use replan() for a single "
                 "scenario")
         if prev is None:
-            return self.plan_many(envs, weights)
+            return self.plan_many(envs, weights, prof=prof)
         b, u, m = envs.g_up.shape[0], envs.g_up.shape[1], envs.g_up.shape[3]
         fleet, warm_um = self._warm_dims(prev)
         if fleet is None:
@@ -596,9 +629,10 @@ class PlannerEngine:
             self._check_fleet_divisible(b)
             w = self._w(envs, weights, n_users=u, sharded=True)
             return self._compiled("replan_many_sharded", envs)(
-                envs, self._prof_rep, w, norms, moms, steps, prev_gains
+                envs, self._prof_arg(prof, sharded=True), w, norms, moms,
+                steps, prev_gains
             )
         w = self._w(envs, weights, n_users=u)
         return self._compiled("replan_many", envs)(
-            envs, self.prof, w, norms, moms, steps, prev_gains
+            envs, self._prof_arg(prof), w, norms, moms, steps, prev_gains
         )

@@ -121,6 +121,52 @@ def transfer_seconds(n_tokens: int, d_model: int, rate_bps: float) -> float:
     return bits / max(rate_bps, 1e-9)
 
 
+def planned_transfer_seconds(env, prof, plan):
+    """Per-user split-upload seconds under the *discrete* plan: the NOMA
+    uplink rate each user actually gets on its assigned subchannel at its
+    planned power, pricing prof.w[s] bits. This is the planner-side twin of
+    `transfer_seconds` (which prices a raw token count at a given rate): for
+    an LM profile built at batch=1, w[s] = seq * d_model * ACT_BITS, so the
+    two agree exactly on the same rate. The online telemetry uses this as
+    the modeled upload time an observation is compared against."""
+    from repro.core import channel  # deferred: runtime must stay importable
+                                    # without the solver stack in the loop
+    beta_up = jax.nn.one_hot(plan.sub_up, env.n_sub, dtype=env.g_up.dtype)
+    r_up = jnp.sum(channel.uplink_rates(env, beta_up, plan.p_up), axis=-1)
+    bits = prof.w[plan.s]
+    return bits / jnp.maximum(r_up, 1e-9)
+
+
+def jit_masked_decode_step(model: Model, mesh, batch: int, max_len: int):
+    """Slot-masked decode step for continuous batching: like
+    jit_decode_step, but takes an `active` (B,) bool mask; inactive slots'
+    caches (including pos) are frozen so a slot can idle between requests
+    and be overwritten at its next admission. Returns (jitted step,
+    params_sharding, cache_sharding); step(params, caches, token, active)
+    -> (logits, new_caches)."""
+    from repro.online.batcher import slot_where  # deferred: avoid cycle
+                                                 # (online.loop imports serve)
+    specs = model.specs()
+    params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shard = shlib.tree_shardings(mesh, specs, params_shapes)
+    cache_shapes = jax.eval_shape(lambda: model.make_caches(batch, max_len))
+    c_shard = shlib.cache_shardings(mesh, cache_shapes, model.cfg)
+    tok_shard = NamedSharding(mesh, shlib.batch_spec(mesh, (batch, 1)))
+
+    def masked_step(params, caches, token, active):
+        token = jnp.where(active[:, None], token, 0)
+        logits, new_caches = model.decode_step(params, caches, token)
+        return logits, slot_where(active, new_caches, caches)
+
+    step = jax.jit(
+        masked_step,
+        in_shardings=(p_shard, c_shard, tok_shard, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    return step, p_shard, c_shard
+
+
 # --------------------------------------------------------------------------
 # online split-serve: re-plan as the scenario evolves, re-cut when s* moves
 # --------------------------------------------------------------------------
@@ -164,6 +210,8 @@ class OnlineSplitServer:
         self.epoch = 0
         self.recuts = 0
         self.cold_resets = 0
+        self.replans = 0                # scheduled + forced engine dispatches
+        self.forced_replans = 0         # QoS-triggered (force=True) subset
         self._iters_acc = jnp.zeros((), jnp.int32)  # device-side accumulator
 
     @property
@@ -172,11 +220,31 @@ class OnlineSplitServer:
         device accumulator; the serving loop itself never does."""
         return int(self._iters_acc)
 
-    def observe(self, env) -> SplitPrograms | None:
-        """Advance one epoch: re-plan on schedule, re-cut if s* moved."""
-        if self.epoch % self.replan_every == 0:
+    def metrics(self) -> dict:
+        """Counters of the server's control-plane activity: epochs seen,
+        replans dispatched (and how many were QoS-forced off-schedule),
+        re-cuts of the served model, cold resets after network shape
+        changes, and total GD iterations (this read syncs the device
+        accumulator)."""
+        return {
+            "epoch": self.epoch,
+            "replans": self.replans,
+            "forced_replans": self.forced_replans,
+            "recuts": self.recuts,
+            "cold_resets": self.cold_resets,
+            "split_layer": self.split_layer,
+            "total_iters": self.total_iters,
+        }
+
+    def observe(self, env, prof=None, force: bool = False) -> SplitPrograms | None:
+        """Advance one epoch: re-plan on schedule (or immediately when
+        ``force`` is set -- the QoS monitor's trigger path), re-cut if s*
+        moved. ``prof`` substitutes a measured profile (repro.online
+        telemetry) as an operand of the engine's already-compiled programs;
+        None plans against the engine's static profile."""
+        if force or self.epoch % self.replan_every == 0:
             try:
-                self.state = self.engine.replan(self.state, env)
+                self.state = self.engine.replan(self.state, env, prof=prof)
             except WarmStateShapeError:
                 # Shape change: the warm-start state no longer fits this
                 # network. Reset it and fall back to a cold plan. (Other
@@ -184,7 +252,10 @@ class OnlineSplitServer:
                 # disable warm starts forever.)
                 self.state = None
                 self.cold_resets += 1
-                self.state = self.engine.plan(env)
+                self.state = self.engine.plan(env, prof=prof)
+            self.replans += 1
+            self.forced_replans += int(
+                force and self.epoch % self.replan_every != 0)
             self._iters_acc = self._iters_acc + self.state.total_iters
             s = int(self.state.plan.s)  # the one host sync: re-cut decision
             if s != self.split_layer:

@@ -1,0 +1,288 @@
+"""Unit tests for the repro.online subsystem: request streams, continuous
+batching, measured-profile telemetry, and the QoS monitor."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import profiles
+from repro.core.types import ComputeConstants, ProfileShapeError, lam
+from repro.online import (
+    ContinuousBatcher,
+    Observation,
+    QosConfig,
+    QosMonitor,
+    RequestStream,
+    StreamConfig,
+    Telemetry,
+)
+from repro.online import batcher as batcherlib
+from repro.online.batcher import Completions
+
+
+# -- streams ---------------------------------------------------------------
+def test_stream_deterministic_replay():
+    """Epoch t's traffic is a function of (base_key, t) alone: two streams
+    driven by the same base key produce identical counts, and replaying
+    from a reset state reproduces the episode."""
+    cfg = StreamConfig(arrival_rate_hz=8.0, epoch_dt_s=0.1)
+    st = RequestStream(cfg, 6)
+    key = jax.random.PRNGKey(3)
+    s1, s2 = st.init(jax.random.PRNGKey(0)), st.init(jax.random.PRNGKey(0))
+    ep1, ep2 = [], []
+    for _ in range(5):
+        s1, c1 = st.step(key, s1)
+        s2, c2 = st.step(key, s2)
+        ep1.append(np.asarray(c1))
+        ep2.append(np.asarray(c2))
+    np.testing.assert_array_equal(np.stack(ep1), np.stack(ep2))
+    assert int(s1.offered) == int(np.sum(ep1))
+
+
+def test_stream_poisson_rate_and_cap():
+    """Mean arrivals approach rate*dt per active user; the per-epoch cap
+    holds exactly; inactive sessions offer nothing."""
+    cfg = StreamConfig(arrival_rate_hz=5.0, epoch_dt_s=0.2,
+                       max_per_user_epoch=3, duty_cycle=1.0)
+    st = RequestStream(cfg, 32)
+    state = st.init(jax.random.PRNGKey(1))
+    total, n = 0, 200
+    for _ in range(n):
+        state, counts = st.step(jax.random.PRNGKey(7), state)
+        assert int(jnp.max(counts)) <= 3
+        total += int(jnp.sum(counts))
+    mean = total / (n * 32)
+    # lam = 1.0, capped at 3 -> E[min(Pois(1), 3)] ~ 0.97
+    assert 0.85 < mean < 1.1, mean
+    quiet = RequestStream(dataclasses.replace(cfg, duty_cycle=1e-9), 32)
+    qs = quiet.init(jax.random.PRNGKey(2))
+    qs, counts = quiet.step(jax.random.PRNGKey(7), qs)
+    assert int(jnp.sum(counts)) == 0
+
+
+def test_stream_session_churn_changes_population():
+    cfg = StreamConfig(session_churn_hz=5.0, epoch_dt_s=0.5, duty_cycle=0.5)
+    st = RequestStream(cfg, 64)
+    state = st.init(jax.random.PRNGKey(0))
+    before = np.asarray(state.session)
+    for _ in range(4):
+        state, _ = st.step(jax.random.PRNGKey(9), state)
+    assert np.any(np.asarray(state.session) != before)
+    with pytest.raises(ValueError):
+        RequestStream(StreamConfig(max_per_user_epoch=0), 4)
+    with pytest.raises(ValueError):
+        RequestStream(StreamConfig(duty_cycle=0.0), 4)
+
+
+# -- batcher ---------------------------------------------------------------
+def _step_batch(b, state, counts, now, service, work):
+    u = len(counts)
+    return b.step(state, jnp.asarray(counts, jnp.int32),
+                  jnp.float32(now),
+                  jnp.full((u,), service, jnp.float32),
+                  jnp.full((u,), work, jnp.int32))
+
+
+def test_batcher_fifo_admission_and_completion():
+    """Arrivals queue FIFO, fill free slots, serve for `work` epochs, and
+    complete with latency = queue wait + modeled service."""
+    b = ContinuousBatcher(capacity=2, queue_depth=8, max_per_user_epoch=4)
+    state = b.init()
+    # 4 requests from user 0 at t=0; capacity 2 -> 2 admitted (work 2 -> 1),
+    # 2 queued
+    state, comp = _step_batch(b, state, [4, 0], 0.0, 0.25, 2)
+    assert int(batcherlib.occupancy(state)) == 2
+    assert int(batcherlib.backlog(state)) == 2
+    assert not bool(jnp.any(comp.valid))
+    # work hits 0: both complete (wait 0.0, serv 0.25); the queued pair is
+    # still behind them this epoch (admission precedes the tick)
+    state, comp = _step_batch(b, state, [0, 0], 0.1, 0.25, 2)
+    assert int(jnp.sum(comp.valid)) == 2
+    np.testing.assert_allclose(
+        np.asarray(comp.latency)[np.asarray(comp.valid)], 0.25, atol=1e-6)
+    assert int(batcherlib.occupancy(state)) == 0
+    assert int(batcherlib.backlog(state)) == 2
+    # the freed slots refill from the queue head: wait = 0.2 - 0.0
+    state, comp = _step_batch(b, state, [0, 0], 0.2, 0.25, 2)
+    assert int(batcherlib.occupancy(state)) == 2
+    assert int(batcherlib.backlog(state)) == 0
+    state, comp = _step_batch(b, state, [0, 0], 0.3, 0.25, 2)
+    lat = np.asarray(comp.latency)[np.asarray(comp.valid)]
+    np.testing.assert_allclose(lat, 0.2 + 0.25, atol=1e-5)
+    assert int(state.completed) == 4
+
+
+def test_batcher_drops_on_full_ring():
+    b = ContinuousBatcher(capacity=1, queue_depth=2, max_per_user_epoch=4)
+    state = b.init()
+    # every arrival passes through the ring before admission: 2 fit the
+    # depth-2 ring (one of them is admitted in the same epoch), 2 drop
+    state, _ = _step_batch(b, state, [4], 0.0, 1.0, 100)
+    assert int(state.dropped) == 2
+    assert int(batcherlib.occupancy(state)) == 1
+    assert int(batcherlib.backlog(state)) == 1
+    with pytest.raises(ValueError):
+        ContinuousBatcher(capacity=0, queue_depth=2, max_per_user_epoch=1)
+
+
+def test_batcher_work_caps_slot_occupancy():
+    """A request occupies its slot for exactly `work` epochs."""
+    b = ContinuousBatcher(capacity=1, queue_depth=4, max_per_user_epoch=1)
+    state = b.init()
+    state, comp = _step_batch(b, state, [1], 0.0, 0.5, 3)
+    for _ in range(2):
+        assert int(batcherlib.occupancy(state)) == 1
+        state, comp = _step_batch(b, state, [0], 0.0, 0.5, 3)
+    assert bool(jnp.any(comp.valid))
+    assert int(batcherlib.occupancy(state)) == 0
+
+
+# -- telemetry -------------------------------------------------------------
+def _obs(prof, comp, s, congestion, rate_up=1e6, rate_dn=1e6, r=4.0):
+    f = prof.n_layers
+    on_dev = jnp.arange(f) < s
+    edge_speed = lam(jnp.float32(r), comp) * comp.c_min_edge
+    t_layer = jnp.where(on_dev, prof.fl / comp.c_device,
+                        prof.fl * congestion / edge_speed)
+    return Observation(t_layer=t_layer,
+                       t_up=prof.w[s] / rate_up,
+                       rate_up=jnp.float32(rate_up),
+                       rate_dn=jnp.float32(rate_dn),
+                       r_units=jnp.float32(r))
+
+
+def test_telemetry_congestion_flows_into_m_down_not_fl():
+    """Edge congestion must not inflate fl (it would cancel out of the
+    split comparison); it lands in kappa and the measured m_down."""
+    prof = profiles.nin()
+    comp = ComputeConstants()
+    tel = Telemetry(prof, comp, decay=0.0)   # no smoothing: one-shot
+    state = tel.init()
+    s = jnp.int32(3)
+    state = tel.update(state, s, _obs(prof, comp, 3, congestion=10.0))
+    np.testing.assert_allclose(np.asarray(state.fl), np.asarray(prof.fl),
+                               rtol=1e-5)
+    assert float(state.kappa) == pytest.approx(10.0, rel=1e-5)
+    mp = tel.profile(state)
+    # measured m_down grows with the candidate suffix: congested offload is
+    # penalized more the more layers it would offload
+    extra = np.asarray(mp.m_down - prof.m_down)
+    assert extra[0] > extra[5] > extra[-1] == 0.0
+    # uncongested observation relaxes kappa back
+    state = tel.update(state, s, _obs(prof, comp, 3, congestion=1.0))
+    assert float(state.kappa) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_telemetry_ema_and_upload_repricing():
+    prof = profiles.nin()
+    comp = ComputeConstants()
+    tel = Telemetry(prof, comp, decay=0.5)
+    state = tel.init()
+    s = 4
+    # the upload at split 4 observed at half the modeled rate -> w[4] doubles
+    slow = _obs(prof, comp, s, congestion=1.0)
+    slow = slow._replace(t_up=2.0 * prof.w[s] / slow.rate_up)
+    for _ in range(20):
+        state = tel.update(state, jnp.int32(s), slow)
+    w = np.asarray(state.w)
+    assert w[s] == pytest.approx(2.0 * float(prof.w[s]), rel=1e-3)
+    # only the exercised split was touched
+    untouched = np.delete(np.asarray(prof.w), s)
+    np.testing.assert_allclose(np.delete(w, s), untouched, rtol=1e-6)
+    assert int(state.updates) == 20
+    with pytest.raises(ValueError):
+        Telemetry(prof, comp, decay=1.0)
+
+
+def test_telemetry_profile_is_planner_compatible():
+    """profile() output passes validate_like (same shapes/dtypes/name) and
+    keeps stable avals across updates -- the no-recompile contract."""
+    prof = profiles.nin()
+    comp = ComputeConstants()
+    tel = Telemetry(prof, comp)
+    state = tel.init()
+    mp0 = tel.profile(state)
+    prof.validate_like(mp0)
+    state = tel.update(state, jnp.int32(2),
+                       _obs(prof, comp, 2, congestion=7.0))
+    mp1 = tel.profile(state)
+    assert jax.eval_shape(lambda: mp0) == jax.eval_shape(lambda: mp1)
+    assert mp1.name == prof.name
+
+
+def test_profile_validation_errors_are_specific():
+    prof = profiles.nin()
+    other = profiles.vgg16()
+    with pytest.raises(ProfileShapeError, match="layers"):
+        prof.validate_like(other)
+    renamed = dataclasses.replace(prof, name="nin-measured")
+    with pytest.raises(ProfileShapeError, match="name"):
+        prof.validate_like(renamed)
+    wrong_dtype = dataclasses.replace(
+        prof, fl=prof.fl.astype(jnp.float64)
+        if jax.config.jax_enable_x64 else prof.fl.astype(jnp.float16))
+    with pytest.raises(ProfileShapeError, match="fl"):
+        prof.validate_like(wrong_dtype)
+    # like() repairs dtype and preserves the name
+    fixed = prof.like(prof.fl.astype(jnp.float16), prof.w, prof.m_down)
+    assert fixed.fl.dtype == prof.fl.dtype and fixed.name == prof.name
+    tel = Telemetry(prof, ComputeConstants())
+    with pytest.raises(ProfileShapeError):
+        tel.init(other)
+
+
+# -- qos -------------------------------------------------------------------
+def _complete(latencies, users=None):
+    lat = jnp.asarray(latencies, jnp.float32)
+    b = lat.shape[0]
+    return Completions(
+        valid=jnp.ones((b,), bool),
+        user=jnp.zeros((b,), jnp.int32) if users is None
+        else jnp.asarray(users, jnp.int32),
+        latency=lat, wait=jnp.zeros((b,), jnp.float32), serv=lat)
+
+
+def test_qos_percentiles_match_numpy():
+    cfg = QosConfig(window=64, p95_max_s=1e9, p50_max_s=1e9,
+                    miss_rate_max=1.1)
+    mon = QosMonitor(cfg, 2)
+    state = mon.init()
+    rng = np.random.default_rng(0)
+    seen = []
+    for _ in range(6):
+        lats = rng.uniform(0.01, 0.9, size=5)
+        seen.extend(lats)
+        state, rep = mon.update(state, _complete(lats))
+    ranked = np.sort(seen)
+    n = len(seen)
+    exp50 = ranked[int(round(0.50 * (n - 1)))]
+    exp95 = ranked[int(round(0.95 * (n - 1)))]
+    assert float(rep.p50) == pytest.approx(exp50, rel=1e-5)
+    assert float(rep.p95) == pytest.approx(exp95, rel=1e-5)
+    assert not bool(rep.trigger)
+
+
+def test_qos_trigger_fires_and_cools_down():
+    cfg = QosConfig(deadline_s=0.1, p95_max_s=0.2, p50_max_s=0.15,
+                    miss_rate_max=0.5, window=16, cooldown_epochs=3)
+    mon = QosMonitor(cfg, 4)
+    state = mon.init()
+    state, rep = mon.update(state, _complete([0.01, 0.02, 0.03]))
+    assert not bool(rep.trigger)
+    # sustained latency breach: first breach triggers, cooldown holds after
+    state, rep = mon.update(state, _complete([0.9, 0.8, 0.95]))
+    assert bool(rep.trigger)
+    for _ in range(2):
+        state, rep = mon.update(state, _complete([0.9, 0.8, 0.95]))
+        assert not bool(rep.trigger)       # cooling down
+    for _ in range(2):
+        state, rep = mon.update(state, _complete([0.9, 0.8, 0.95]))
+    assert int(state.triggers) >= 2        # re-armed and re-fired
+    assert int(state.missed) > 0
+    # per-user miss EMA tracked for the completing users
+    state, _ = mon.update(state, _complete([0.9], users=[2]))
+    assert float(state.miss[2]) > 0.0
+    with pytest.raises(ValueError):
+        QosMonitor(QosConfig(window=1), 2)

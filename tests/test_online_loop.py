@@ -1,0 +1,163 @@
+"""Closed-loop integration: the online epoch program compiles once, the
+measured profile moves s* under edge load, batched serving matches
+sequential serving bit-for-bit, and the transfer pricing agrees between
+the serving runtime and the planner."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import channel, profiles
+from repro.core.types import GdConfig
+from repro.models import Model
+from repro.online import DecodeBatcher, EdgeBatcher, OnlineLoop, ServiceConfig, StreamConfig
+from repro.planning import PlannerEngine, compile_log
+from repro.runtime.serve import (
+    make_split_serve,
+    planned_transfer_seconds,
+    transfer_seconds,
+)
+from repro.scenarios import Scenario, ScenarioConfig
+
+ADAM_CFG = GdConfig(step_size=3e-2, eps=1e-4, max_iters=60, optimizer="adam")
+SCEN = ScenarioConfig(n_users=8, n_aps=2, n_sub=3, fading_rho=0.95)
+STREAM = StreamConfig(arrival_rate_hz=30.0, epoch_dt_s=0.02, deadline_s=0.2)
+LOADED = ServiceConfig(edge_capacity=4, queue_depth=32, load_gain=8.0,
+                       replan_every=5)
+
+
+def _loop(feedback: bool, service: ServiceConfig = LOADED) -> OnlineLoop:
+    eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+    return OnlineLoop(Scenario(SCEN), eng, STREAM, service,
+                      feedback=feedback)
+
+
+def test_steady_state_compiles_once():
+    """After warmup, an entire feedback episode -- scenario, streams,
+    batching, telemetry, QoS, and the measured-profile replans -- traces
+    nothing: the epoch program and every planner program are reused."""
+    loop = _loop(feedback=True)
+    loop.reset(jax.random.PRNGKey(0))
+    for _ in range(12):                       # warmup: traces epoch + replan
+        loop.step_epoch()
+    with compile_log() as log:
+        for _ in range(12):
+            loop.step_epoch()
+    assert log == []
+
+
+def test_closed_loop_moves_split_under_edge_load():
+    """With the edge congestion-degraded, the measured profile must push
+    s* off the static optimum (keep more layers local); the static arm
+    planning on the same traffic must not move."""
+    m_fb = _loop(feedback=True).run(jax.random.PRNGKey(0), 70, record=True)
+    m_st = _loop(feedback=False).run(jax.random.PRNGKey(0), 70, record=True)
+    s_fb, s_st = m_fb["history"]["s"], m_st["history"]["s"]
+    assert max(m_fb["history"]["congestion"]) > 2.0   # load was induced
+    assert len(set(s_st)) == 1                        # static arm is blind
+    assert max(s_fb) > max(s_st)                      # feedback reacts
+    # and the reaction pays: more completions per second under the same
+    # offered traffic
+    assert m_fb["requests_per_s"] > m_st["requests_per_s"]
+
+
+def test_unloaded_loop_tracks_static_plan():
+    """With load_gain=0 the edge is ideal: measured and static profiles
+    agree, so the closed loop must keep the static split (no drift from
+    the feedback path itself)."""
+    ideal = dataclasses.replace(LOADED, load_gain=0.0)
+    m_fb = _loop(True, ideal).run(jax.random.PRNGKey(1), 40, record=True)
+    m_st = _loop(False, ideal).run(jax.random.PRNGKey(1), 40, record=True)
+    assert m_fb["history"]["s"] == m_st["history"]["s"]
+
+
+def test_loop_conserves_requests():
+    loop = _loop(feedback=True)
+    m = loop.run(jax.random.PRNGKey(2), 50)
+    in_flight = int(jnp.sum(loop._bt.active))
+    queued = int(loop._bt.q_size)
+    assert m["offered"] == m["completed"] + m["dropped"] + in_flight + queued
+    assert m["served"] == m["completed"]
+    assert m["epochs"] == 50
+    assert m["replans"] >= 50 // LOADED.replan_every
+
+
+def test_planned_transfer_matches_serve_pricing():
+    """serve.transfer_seconds (runtime: tokens x d_model at a rate) and
+    planned_transfer_seconds (planner: prof.w[s] bits at the discrete
+    plan's NOMA rate) agree for an LM profile at batch=1 -- both sides
+    price the same activation."""
+    arch = configs.get("qwen1.5-0.5b").reduced()
+    seq = 16
+    prof = profiles.from_arch_config(arch, seq=seq, batch=1)
+    env = channel.make_env(jax.random.PRNGKey(3), n_users=6, n_aps=2,
+                           n_sub=3)
+    eng = PlannerEngine(prof, cfg=ADAM_CFG)
+    plan = eng.plan(env).plan
+    s_mid = arch.n_layers // 2
+    plan = dataclasses.replace(plan, s=jnp.int32(s_mid))
+    t_planner = np.asarray(planned_transfer_seconds(env, prof, plan))
+    beta = jax.nn.one_hot(plan.sub_up, env.n_sub, dtype=env.g_up.dtype)
+    rates = np.asarray(
+        jnp.sum(channel.uplink_rates(env, beta, plan.p_up), -1))
+    t_runtime = np.array(
+        [transfer_seconds(seq, arch.d_model, r) for r in rates])
+    np.testing.assert_allclose(t_planner, t_runtime, rtol=1e-6)
+
+
+def test_masked_batching_matches_sequential_serving():
+    """Satellite: stacked masked-slot edge serving == per-request
+    sequential serving for every cut in a 3-point sweep, and the decode
+    path's slot caches survive masking (a frozen slot resumes exactly)."""
+    arch = configs.get("qwen1.5-0.5b").reduced()
+    model = Model(arch, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s_len, v = 3, 8, arch.vocab_size
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s_len), 0, v)
+
+    # single-shot split inference, batched over slots
+    for cut in (0, arch.n_layers // 2, arch.n_layers):
+        progs = make_split_serve(model, params, cut)
+        acts = [progs.device_fn(toks[i:i + 1]) for i in range(b)]
+        eb = EdgeBatcher(b, s_len, arch.d_model, dtype=acts[0].dtype)
+        buf = eb.buf
+        for i, a in enumerate(acts):
+            buf = eb.write(buf, i, a)
+        batched = eb.run(progs.edge_fn, buf)
+        seq_logits = jnp.concatenate([progs.edge_fn(a) for a in acts], 0)
+        err = float(jnp.max(jnp.abs(batched - seq_logits)))
+        assert err < 5e-2, (cut, err)
+
+    # decode path: per-request reference trajectories
+    refs = []
+    prefill = jax.jit(lambda p, t: model.prefill(p, {"tokens": t},
+                                                 s_len + 4))
+    for i in range(b):
+        lg, caches = prefill(params, toks[i:i + 1])
+        steps = [lg[0]]
+        tok = jnp.argmax(lg, -1)[:, None]
+        for _ in range(2):
+            lg, caches = model.decode_step(params, caches, tok)
+            steps.append(lg[0])
+            tok = jnp.argmax(lg, -1)[:, None]
+        refs.append(steps)
+
+    db = DecodeBatcher(model, params, capacity=b, max_len=s_len + 4)
+    for i in range(b):
+        pre = db.admit(i, toks[i:i + 1])
+        assert float(jnp.max(jnp.abs(pre - refs[i][0]))) < 5e-2
+    tok1 = jnp.stack([jnp.argmax(r[0]) for r in refs])[:, None]
+    lg1 = db.step(tok1, jnp.array([True, True, True]))
+    for i in range(b):
+        assert float(jnp.max(jnp.abs(lg1[i] - refs[i][1]))) < 5e-2, i
+    # slot 1 sits out an epoch (mask off), then resumes: its frozen cache
+    # must produce the same next step as the uninterrupted reference
+    tok2 = jnp.stack([jnp.argmax(r[1]) for r in refs])[:, None]
+    lg2 = db.step(tok2, jnp.array([True, False, True]))
+    for i in (0, 2):
+        assert float(jnp.max(jnp.abs(lg2[i] - refs[i][2]))) < 5e-2, i
+    lg3 = db.step(tok2, jnp.array([False, True, False]))
+    assert float(jnp.max(jnp.abs(lg3[1] - refs[1][2]))) < 5e-2

@@ -13,7 +13,13 @@ from repro.core import (
     project_simplex_floor,
     solve,
 )
-from repro.planning import PlannerEngine, PlanState, member, stack_envs
+from repro.planning import (
+    PlannerEngine,
+    PlanState,
+    compile_log,
+    member,
+    stack_envs,
+)
 from repro.scenarios import Scenario, ScenarioConfig
 
 
@@ -464,3 +470,37 @@ def test_online_split_server_shape_change_resets_cold(small_env):
     srv.observe(make_env(jax.random.PRNGKey(6), 10, 2, 4))  # warm again
     assert srv.cold_resets == 1
     assert srv.epoch == 3
+    # the metrics() view agrees with the attribute counters and carries the
+    # control-plane totals the online loop reports
+    m = srv.metrics()
+    assert m["cold_resets"] == 1 and m["epoch"] == 3
+    assert m["replans"] == 3 and m["forced_replans"] == 0
+    assert m["split_layer"] == int(srv.state.plan.s)
+    assert m["total_iters"] == srv.total_iters > 0
+
+
+def test_online_split_server_forced_and_measured_replans(small_env):
+    """QoS-forced replans run off-schedule and are counted separately; a
+    measured profile (ModelProfile.like) reuses the compiled replan program;
+    an incompatible profile raises ProfileShapeError before dispatch."""
+    import dataclasses
+
+    from repro.core.types import ProfileShapeError
+    from repro.runtime.serve import OnlineSplitServer
+
+    prof = profiles.nin()
+    eng = PlannerEngine(prof, cfg=ADAM_CFG)
+    srv = OnlineSplitServer(eng, replan_every=4)
+    srv.observe(small_env)                        # epoch 0: scheduled
+    srv.observe(small_env)                        # epoch 1: no replan
+    assert srv.metrics()["replans"] == 1
+    srv.observe(small_env, force=True)            # epoch 2: forced (traces)
+    measured = prof.like(prof.fl * 2.0, prof.w, prof.m_down)
+    with compile_log() as log:
+        srv.observe(small_env, prof=measured, force=True)  # epoch 3: forced
+    assert log == []                              # same compiled program
+    m = srv.metrics()
+    assert m["replans"] == 3 and m["forced_replans"] == 2
+    bad = dataclasses.replace(prof, fl=prof.fl[:-1])
+    with pytest.raises(ProfileShapeError):
+        srv.observe(small_env, prof=bad, force=True)
