@@ -56,6 +56,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        chaos_serve,
         kernel_bench,
         ligd_properties,
         online_serve,
@@ -75,6 +76,7 @@ def main() -> None:
         "kernel_bench": kernel_bench.run,
         "roofline": roofline_report.run,
         "online_serve": online_serve.run,
+        "chaos_serve": chaos_serve.run,
     }
     chosen = (args.only.split(",") if args.only else list(all_benches))
     t0 = time.time()

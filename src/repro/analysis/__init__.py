@@ -16,6 +16,11 @@ from repro.analysis.engine_audit import (  # noqa: F401
     engine_rules,
     runtime_probe,
 )
+from repro.analysis.fault_audit import (  # noqa: F401
+    audit_faults,
+    chaos_loop_probe,
+    guard_trace_audit,
+)
 from repro.analysis.online_audit import (  # noqa: F401
     audit_online,
     audit_online_replan,

@@ -25,6 +25,7 @@ from repro.analysis.engine_audit import (
     audit_engine,
     runtime_probe,
 )
+from repro.analysis.fault_audit import audit_faults
 from repro.analysis.online_audit import (
     audit_online_replan,
     online_feedback_probe,
@@ -103,8 +104,12 @@ def main(argv: list[str] | None = None) -> int:
         report.merge(online_feedback_probe(online_eng, env_a,
                                            label="runtime"))
         report.merge(online_loop_probe(label="runtime"))
+        # chaos hardening: fault injection must ride the same compiled
+        # epoch program (rates are operands) and the guard chain must keep
+        # every served plan finite without host-side checks
+        report.merge(audit_faults(label="runtime"))
         print("ran runtime probes (compile log, transfer guard, cache "
-              "keys, online feedback, online loop)")
+              "keys, online feedback, online loop, chaos loop)")
 
     payload = report.to_dict()
     payload["presets"] = list(args.presets)

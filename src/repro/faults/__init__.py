@@ -1,0 +1,58 @@
+"""Chaos engineering for the closed loop: seeded fault injection, in-jit
+health guards, and the graceful-degradation ladder.
+
+Three layers, mirroring the discipline of the measured-profile feedback
+path (everything that varies per epoch is an *operand* of an
+already-compiled program, never a trace-time constant):
+
+* ``injectors`` -- deterministic fault processes (deep-fade link outages,
+  AP blackouts, telemetry dropout/corruption, service-time spikes) traced
+  into the compiled epoch program. Fault rates are f32 device scalars
+  (``FaultConfig.rates()``), so sweeping an outage rate is an operand swap
+  with zero recompiles; the persistent outage masks are a ``FaultState``
+  pytree donated across epochs like every other loop state.
+* ``guards`` -- in-jit finiteness/feasibility checks over plans, measured
+  profiles, observations, and service times, packed into ONE int32 health
+  word per epoch. The loop's host-sync budget stays at PR 8's two scalars
+  plus this word; the planner's plan check rides the existing s* sync as
+  ``(health << 16) | s``.
+* ``degrade`` -- the host-side degradation ladder
+  (reject-and-hold-last-good-plan -> telemetry quarantine -> baseline
+  fallback -> cold replan with exponential backoff) plus the epoch
+  watchdog generalizing ``runtime.ft`` to the serving path.
+
+Machine-checked by ``repro.analysis.fault_audit`` (blocking in CI) and
+exercised by ``benchmarks/chaos_serve.py``.
+"""
+from repro.faults.degrade import (  # noqa: F401
+    DegradeLadder,
+    EpochWatchdog,
+    LadderConfig,
+    fallback_plan,
+)
+from repro.faults.guards import (  # noqa: F401
+    HEALTH_BITS,
+    PLAN_MASK,
+    PLAN_WORD_SHIFT,
+    TELEMETRY_MASK,
+    decode_health,
+    observation_health,
+    pack_health,
+    plan_health,
+    plan_word,
+    service_health,
+    split_plan_word,
+    telemetry_health,
+    tree_select,
+)
+from repro.faults.injectors import (  # noqa: F401
+    FaultConfig,
+    FaultDraw,
+    FaultRates,
+    FaultState,
+    apply_env_faults,
+    corrupt_observation,
+    fault_step,
+    init_fault_state,
+    spike_service,
+)

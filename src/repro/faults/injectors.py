@@ -1,0 +1,182 @@
+"""Seeded, deterministic fault processes for the closed serving loop.
+
+Every fault is drawn inside the compiled epoch program from the SAME
+epoch-folded key stream the scenario uses, so an episode is exactly
+reproducible from its seed, and every per-epoch quantity is a device
+array -- injection moves nothing to host and traces nothing after warmup.
+
+The knobs follow the ``prof=`` operand discipline: ``FaultConfig`` is the
+host-side description, ``FaultConfig.rates()`` lowers it to ``FaultRates``,
+a NamedTuple of f32 device *scalars* that enter the epoch program as plain
+operands. Sweeping an outage rate (benchmarks/chaos_serve.py) swaps the
+operand; the program's cache key never sees the numbers.
+
+Link outages and AP blackouts are persistent Gilbert-Elliott-style Markov
+processes, not per-epoch coin flips: a user in a deep fade stays faded for
+``link_mean_epochs`` on average, which is what makes holding the last good
+plan (rather than replanning into the fade every epoch) a meaningful
+strategy. The outage masks live in ``FaultState``, donated across epochs
+like every other loop state pytree. ``link_outage_rate`` /
+``ap_outage_rate`` are the *long-run fraction of time* spent in outage
+(the acceptance criterion's "20% link-outage rate"), from which the
+per-epoch onset probability is derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, NetworkEnv
+
+if TYPE_CHECKING:  # repro.online imports the loop, which imports this
+    # package back -- annotation-only here keeps the import acyclic
+    from repro.online.telemetry import Observation
+
+
+class FaultRates(NamedTuple):
+    """Per-epoch fault probabilities/scales as f32 device scalars -- the
+    epoch program's fault operand (same avals for every config)."""
+
+    link_fail: Array        # () P(healthy link enters a deep fade)
+    link_recover: Array     # () P(faded link recovers)
+    fade_depth: Array       # () gain multiplier inside a fade (<< 1)
+    ap_fail: Array          # () P(healthy AP blacks out)
+    ap_recover: Array       # () P(blacked-out AP recovers)
+    tel_drop: Array         # () P(this epoch's telemetry sample is lost)
+    tel_spike: Array        # () P(this epoch's telemetry sample is spiked)
+    tel_spike_scale: Array  # () multiplier applied to a spiked sample
+    svc_spike: Array        # () per-user P(service-time spike)
+    svc_spike_scale: Array  # () multiplier applied to a spiked service
+
+
+class FaultState(NamedTuple):
+    """Persistent outage masks, donated across epochs."""
+
+    link_down: Array   # (U,) bool: user is in a deep fade
+    ap_down: Array     # (N,) bool: AP is blacked out
+
+
+class FaultDraw(NamedTuple):
+    """One epoch's realized faults (device arrays, consumed in-jit)."""
+
+    link_down: Array   # (U,) bool
+    ap_down: Array     # (N,) bool
+    tel_drop: Array    # () bool
+    tel_spike: Array   # () bool
+    svc_mult: Array    # (U,) f32 service-time multiplier (1.0 = clean)
+
+
+def _onset(stationary: float, mean_epochs: float) -> float:
+    """Markov onset probability giving the requested stationary outage
+    fraction at the given mean outage duration."""
+    pi = min(max(float(stationary), 0.0), 0.999)
+    recover = 1.0 / max(float(mean_epochs), 1.0)
+    return min(pi * recover / max(1.0 - pi, 1e-6), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Host-side fault mix. All rates default to zero: a zero config is an
+    exact identity on the loop (bernoulli(p=0) never fires, multipliers
+    stay 1.0), so hardened and unhardened loops share one epoch program."""
+
+    link_outage_rate: float = 0.0       # long-run fraction of users in fade
+    link_mean_epochs: float = 8.0       # mean fade duration
+    fade_depth: float = 1e-6            # gain multiplier inside a fade
+    ap_outage_rate: float = 0.0         # long-run fraction of APs down
+    ap_mean_epochs: float = 20.0
+    telemetry_drop_rate: float = 0.0    # P(sample lost -> NaN) per epoch
+    telemetry_spike_rate: float = 0.0   # P(sample spiked) per epoch
+    telemetry_spike_scale: float = 50.0
+    service_spike_rate: float = 0.0     # per-user P(transient slow service)
+    service_spike_scale: float = 10.0
+
+    def rates(self) -> FaultRates:
+        """Lower to the epoch program's f32-scalar operand tuple."""
+        return FaultRates(
+            link_fail=jnp.float32(_onset(self.link_outage_rate,
+                                         self.link_mean_epochs)),
+            link_recover=jnp.float32(1.0 / max(self.link_mean_epochs, 1.0)),
+            fade_depth=jnp.float32(self.fade_depth),
+            ap_fail=jnp.float32(_onset(self.ap_outage_rate,
+                                       self.ap_mean_epochs)),
+            ap_recover=jnp.float32(1.0 / max(self.ap_mean_epochs, 1.0)),
+            tel_drop=jnp.float32(self.telemetry_drop_rate),
+            tel_spike=jnp.float32(self.telemetry_spike_rate),
+            tel_spike_scale=jnp.float32(self.telemetry_spike_scale),
+            svc_spike=jnp.float32(self.service_spike_rate),
+            svc_spike_scale=jnp.float32(self.service_spike_scale),
+        )
+
+
+def init_fault_state(n_users: int, n_aps: int) -> FaultState:
+    return FaultState(link_down=jnp.zeros((int(n_users),), bool),
+                      ap_down=jnp.zeros((int(n_aps),), bool))
+
+
+def fault_step(rates: FaultRates, key: Array,
+               state: FaultState) -> tuple[FaultState, FaultDraw]:
+    """Advance the Markov outage masks one epoch and draw the epoch's
+    transient faults. Pure; composable inside the jitted epoch program."""
+    u = state.link_down.shape[0]
+    n = state.ap_down.shape[0]
+    k_lf, k_lr, k_af, k_ar, k_td, k_ts, k_sv = jax.random.split(key, 7)
+    link_down = jnp.where(
+        state.link_down,
+        ~jax.random.bernoulli(k_lr, rates.link_recover, (u,)),
+        jax.random.bernoulli(k_lf, rates.link_fail, (u,)))
+    ap_down = jnp.where(
+        state.ap_down,
+        ~jax.random.bernoulli(k_ar, rates.ap_recover, (n,)),
+        jax.random.bernoulli(k_af, rates.ap_fail, (n,)))
+    svc_mult = jnp.where(
+        jax.random.bernoulli(k_sv, rates.svc_spike, (u,)),
+        rates.svc_spike_scale, jnp.float32(1.0))
+    new = FaultState(link_down=link_down, ap_down=ap_down)
+    draw = FaultDraw(link_down=link_down, ap_down=ap_down,
+                     tel_drop=jax.random.bernoulli(k_td, rates.tel_drop),
+                     tel_spike=jax.random.bernoulli(k_ts, rates.tel_spike),
+                     svc_mult=svc_mult)
+    return new, draw
+
+
+def apply_env_faults(env: NetworkEnv, draw: FaultDraw,
+                     rates: FaultRates) -> NetworkEnv:
+    """Mask the channel gains: faded users' gains scale by ``fade_depth``
+    in both directions, blacked-out APs' gains go to exactly zero for the
+    whole cell. Downstream rate floors (channel.user_rates and the loop's
+    service model clamp rates at 1e-9) keep the math finite -- a blackout
+    produces astronomically bad but *finite* plans; the NaN channel is
+    telemetry corruption. A zero draw returns gains scaled by 1.0."""
+    fade_u = jnp.where(draw.link_down, rates.fade_depth,
+                       jnp.float32(1.0))                      # (U,)
+    ap_up = jnp.where(draw.ap_down, jnp.float32(0.0),
+                      jnp.float32(1.0))                       # (N,)
+    g_up = env.g_up * fade_u[:, None, None] * ap_up[None, :, None]
+    g_dn = env.g_dn * ap_up[:, None, None] * fade_u[None, :, None]
+    return dataclasses.replace(env, g_up=g_up.astype(env.g_up.dtype),
+                               g_dn=g_dn.astype(env.g_dn.dtype))
+
+
+def corrupt_observation(obs: Observation, draw: FaultDraw,
+                        rates: FaultRates) -> Observation:
+    """Telemetry faults: a dropped sample becomes NaN (missing data that an
+    unguarded EMA propagates forever -- the silent-corruption channel the
+    motivation names), a spiked sample is scaled by ``tel_spike_scale``
+    (finite corruption that drives the kappa estimate off the rails)."""
+    nanf = jnp.float32(jnp.nan)
+
+    def hit(x: Array) -> Array:
+        spiked = jnp.where(draw.tel_spike, x * rates.tel_spike_scale, x)
+        return jnp.where(draw.tel_drop, jnp.full_like(spiked, nanf), spiked)
+
+    return obs._replace(t_layer=hit(obs.t_layer), t_up=hit(obs.t_up))
+
+
+def spike_service(service: Array, draw: FaultDraw) -> Array:
+    """Transient service-time spikes (a wedged edge worker, a GC pause):
+    per-user multiplicative, memoryless."""
+    return service * draw.svc_mult

@@ -35,3 +35,5 @@ from repro.online.loop import (  # noqa: F401
     OnlineLoop,
     ServiceConfig,
 )
+from repro.faults.degrade import LadderConfig  # noqa: F401
+from repro.faults.injectors import FaultConfig  # noqa: F401

@@ -53,6 +53,8 @@ class BatchState(NamedTuple):
     # counters
     dropped: Array   # () int32 arrivals rejected on a full ring
     completed: Array  # () int32 requests fully served
+    shed: Array      # () int32 requests shed by the degradation ladder
+                     # (admission control under faults; 0 when disabled)
 
 
 class Completions(NamedTuple):
@@ -81,6 +83,7 @@ def init_state(capacity: int, queue_depth: int) -> BatchState:
         q_size=jnp.int32(0),
         dropped=jnp.int32(0),
         completed=jnp.int32(0),
+        shed=jnp.int32(0),
     )
 
 
@@ -116,19 +119,31 @@ def enqueue(state: BatchState, counts: Array, now: Array,
 
 
 def admit(state: BatchState, now: Array, service_s: Array,
-          work_steps: Array) -> BatchState:
+          work_steps: Array, shed: Array | None = None) -> BatchState:
     """Refill free slots from the queue head (FIFO). ``service_s``: (U,)
     modeled service seconds per user at the current operating point;
-    ``work_steps``: (U,) int32 slot epochs the request will occupy."""
+    ``work_steps``: (U,) int32 slot epochs the request will occupy.
+
+    ``shed`` (optional, (U,) bool) is the degradation ladder's admission
+    gate: a queue head whose user is flagged is popped and counted into
+    ``state.shed`` instead of occupying a slot -- under a persistent deep
+    fade its modeled work would pin the slot for ``max_work_epochs``,
+    starving every healthy user behind it. None preserves the exact
+    ungated behavior."""
     q = state.q_user.shape[0]
 
     def fill(carry, slot):
         st = carry
         free = ~st.active[slot]
         have = st.q_size > 0
-        take = free & have
+        pop = free & have
         uid = st.q_user[st.q_head % q]
         t0 = st.q_t[st.q_head % q]
+        if shed is None:
+            doomed = jnp.bool_(False)
+        else:
+            doomed = pop & shed[jnp.maximum(uid, 0)]
+        take = pop & ~doomed
         nowf = now.astype(jnp.float32)
         st = st._replace(
             active=st.active.at[slot].set(jnp.where(take, True,
@@ -141,8 +156,9 @@ def admit(state: BatchState, now: Array, service_s: Array,
                                                 st.serv[slot])),
             work=st.work.at[slot].set(jnp.where(take, work_steps[uid],
                                                 st.work[slot])),
-            q_head=(st.q_head + take.astype(jnp.int32)) % q,
-            q_size=st.q_size - take.astype(jnp.int32),
+            q_head=(st.q_head + pop.astype(jnp.int32)) % q,
+            q_size=st.q_size - pop.astype(jnp.int32),
+            shed=st.shed + doomed.astype(jnp.int32),
         )
         return st, take
 

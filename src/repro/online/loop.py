@@ -27,6 +27,15 @@ episode compiles each program exactly once and moves no arrays to host
 beyond the two decision scalars. Both properties are machine-checked:
 planning.compile_log in tests, repro.analysis.online_audit in CI.
 
+Chaos hardening (PR 9) rides the same discipline: fault injection
+(repro.faults.injectors) is traced into the epoch program with the rates
+as f32-scalar operands and the persistent outage masks as one more donated
+state pytree; in-jit guards (repro.faults.guards) pack every health check
+into ONE extra int32 synced per epoch; and the host-side degradation
+ladder (repro.faults.degrade) turns that word into reject-and-hold /
+quarantine / baseline-fallback / backed-off-cold-replan decisions. A loop
+constructed without ``degrade=`` is byte-for-byte the PR 8 behavior.
+
 The service model is where the closed loop earns its keep: the edge's
 effective speed degrades with load (`1 + load_gain * (occupancy + backlog)
 / capacity`), which the *static* profile cannot see. The telemetry
@@ -46,7 +55,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import channel
-from repro.core.types import Array, ModelProfile, SplitPlan, lam
+from repro.core.types import Array, ModelProfile, SplitPlan, lam, make_weights
+from repro.faults import degrade as degradelib
+from repro.faults import guards, injectors
+from repro.faults.degrade import DegradeLadder, EpochWatchdog, LadderConfig
+from repro.faults.injectors import FaultConfig, FaultState
 from repro.planning.engine import _recorded
 from repro.runtime.serve import OnlineSplitServer
 from repro.online import batcher as batcherlib
@@ -82,13 +95,16 @@ class ServiceConfig:
 class EpochOut(NamedTuple):
     """Device-resident per-epoch outputs handed back to the host loop."""
 
-    env: object          # NetworkEnv of the new epoch (the replan operand)
+    env: object          # NetworkEnv of the new epoch (the replan operand;
+                         # fault-masked gains when injection is active)
     report: QosReport
     counts: Array        # (U,) arrivals this epoch
     completed: Array     # () int32 completions this epoch
     occupancy: Array     # () int32 active slots after the tick
     backlog: Array       # () int32 queued requests after the tick
     congestion: Array    # () f32 edge slowdown factor used this epoch
+    health: Array        # () int32 packed health word (faults.guards)
+    faulted: Array       # () int32 users in deep fade this epoch
 
 
 class OnlineLoop:
@@ -101,14 +117,35 @@ class OnlineLoop:
     def __init__(self, scenario, engine, stream_cfg: StreamConfig,
                  service_cfg: ServiceConfig = ServiceConfig(),
                  qos_cfg: QosConfig | None = None,
-                 model=None, params=None, feedback: bool = True):
+                 model=None, params=None, feedback: bool = True,
+                 faults: FaultConfig | None = None,
+                 degrade: LadderConfig | None = None):
         u = scenario.cfg.n_users
         self.scenario = scenario
         self.engine = engine
         self.stream_cfg = stream_cfg
         self.service_cfg = service_cfg
-        self.qos_cfg = qos_cfg or QosConfig(deadline_s=stream_cfg.deadline_s)
         self.feedback = bool(feedback)
+        # Fault injection (zero-rate config is an exact identity) and the
+        # degradation ladder. ``degrade`` hardens the loop: plan guarding
+        # at the server, telemetry quarantine, admission shedding, QoS
+        # non-finite guarding, baseline fallback, epoch watchdog. A loop
+        # without it behaves exactly as PR 8 shipped -- the chaos
+        # benchmark's no-ladder arm.
+        self.fault_cfg = faults or FaultConfig()
+        self._rates = self.fault_cfg.rates()
+        self.ladder = DegradeLadder(degrade) if degrade is not None else None
+        self._hardened = degrade is not None
+        ladder_cfg = degrade if degrade is not None else LadderConfig()
+        self._kappa_max = float(ladder_cfg.kappa_max)
+        self._shed_factor = (float(ladder_cfg.shed_service_factor)
+                             if self._hardened else 0.0)
+        self._watchdog = (EpochWatchdog(ladder_cfg.watchdog_timeout_s)
+                          if self._hardened
+                          and ladder_cfg.watchdog_timeout_s > 0 else None)
+        self.qos_cfg = qos_cfg or QosConfig(
+            deadline_s=stream_cfg.deadline_s,
+            guard_nonfinite=self._hardened)
         self.stream = RequestStream(stream_cfg, u)
         self.batcher = ContinuousBatcher(
             service_cfg.edge_capacity, service_cfg.queue_depth,
@@ -117,11 +154,15 @@ class OnlineLoop:
         self.telemetry = Telemetry(engine.prof, scenario.cfg.comp,
                                    service_cfg.telemetry_decay)
         self.server = OnlineSplitServer(engine, model, params,
-                                        replan_every=service_cfg.replan_every)
+                                        replan_every=service_cfg.replan_every,
+                                        guard_plans=self._hardened)
         # episode state (device pytrees), populated by reset()
         self._sc = self._st = self._bt = self._qs = self._tel = None
+        self._fs: FaultState | None = None
         self._plan: SplitPlan | None = None
         self._key: jax.Array | None = None
+        self._fb_jit = None                  # jitted fallback plan builder
+        self._plan_template = None           # engine plan avals (eval_shape)
 
     # -- the compiled epoch program ---------------------------------------
     def _service_and_observation(self, env, plan: SplitPlan,
@@ -169,13 +210,22 @@ class OnlineLoop:
         dt = stream_cfg.epoch_dt_s
         cap = float(svc.edge_capacity)
         n_users = scen.cfg.n_users
+        hardened = self._hardened
+        kappa_max = self._kappa_max
+        shed_thr = self._shed_factor * stream_cfg.deadline_s
 
-        def epoch(base_key, plan: SplitPlan, sc, st: StreamState,
-                  bt: BatchState, qs: QosState, tel: TelemetryState):
-            k_sc = jax.random.fold_in(jax.random.fold_in(base_key, st.epoch),
-                                      1)
+        def epoch(base_key, plan: SplitPlan, rates: injectors.FaultRates,
+                  sc, st: StreamState, bt: BatchState, qs: QosState,
+                  tel: TelemetryState, fs: FaultState):
+            k_ep = jax.random.fold_in(base_key, st.epoch)
+            k_sc = jax.random.fold_in(k_ep, 1)
+            k_fault = jax.random.fold_in(k_ep, 2)
             sc = scen.step(k_sc, sc)
             env = scen.env(sc)
+            # Faults realize before anything observes the epoch: the masked
+            # gains ARE this epoch's channel, for service and replans alike.
+            fs, draw = injectors.fault_step(rates, k_fault, fs)
+            env = injectors.apply_env_faults(env, draw, rates)
             st, counts = stream_step(stream_cfg, n_users, base_key, st)
             # Congestion from the load the edge is already carrying when
             # this epoch's work lands.
@@ -184,60 +234,177 @@ class OnlineLoop:
             congestion = 1.0 + svc.load_gain * load / cap
             service, obs = self._service_and_observation(env, plan,
                                                          congestion)
+            service = injectors.spike_service(service, draw)
+            obs = injectors.corrupt_observation(obs, draw, rates)
             work = jnp.clip(jnp.ceil(service / dt).astype(jnp.int32), 1,
                             svc.max_work_epochs)
             now = st.epoch.astype(jnp.float32) * dt
-            bt = batcherlib.enqueue(bt, counts, now,
-                                    stream_cfg.max_per_user_epoch)
-            bt = batcherlib.admit(bt, now, service, work)
+            if hardened and shed_thr > 0:
+                # Admission shedding: a user whose modeled service blows
+                # past the deadline by the shed factor (deep fade, AP
+                # blackout) would jam a batch slot for max_work_epochs --
+                # drop its arrivals (and queued heads, in admit) instead of
+                # starving the healthy users behind it.
+                doomed = (service > shed_thr) | ~jnp.isfinite(service)
+                shed_n = jnp.sum(jnp.where(doomed, counts, 0)
+                                 ).astype(jnp.int32)
+                bt = batcherlib.enqueue(bt, jnp.where(doomed, 0, counts),
+                                        now, stream_cfg.max_per_user_epoch)
+                bt = bt._replace(shed=bt.shed + shed_n)
+                bt = batcherlib.admit(bt, now, service, work, shed=doomed)
+            else:
+                bt = batcherlib.enqueue(bt, counts, now,
+                                        stream_cfg.max_per_user_epoch)
+                bt = batcherlib.admit(bt, now, service, work)
             bt, comps = batcherlib.tick(bt)
             qs, report = qos_update(qos_cfg, qs, comps)
-            tel = telemetry_update(comp_consts, svc.telemetry_decay,
-                                   self.engine.prof.fl, tel, plan.s, obs)
+            tel_new = telemetry_update(comp_consts, svc.telemetry_decay,
+                                       self.engine.prof.fl, tel, plan.s, obs)
+            obs_word = guards.observation_health(obs)
+            if hardened:
+                # Rung 2, in-jit half: a corrupt observation never enters
+                # the EMA -- the telemetry state holds, the host-side
+                # quarantine decides when to trust the profile again.
+                tel = guards.tree_select(obs_word == 0, tel_new, tel)
+            else:
+                tel = tel_new
+            health = guards.pack_health(
+                obs_word, guards.service_health(service),
+                guards.telemetry_health(tel, kappa_max))
             out = EpochOut(env=env, report=report, counts=counts,
                            completed=jnp.sum(comps.valid).astype(jnp.int32),
                            occupancy=batcherlib.occupancy(bt),
                            backlog=batcherlib.backlog(bt),
-                           congestion=congestion)
-            return sc, st, bt, qs, tel, out
+                           congestion=congestion,
+                           health=health,
+                           faulted=jnp.sum(draw.link_down
+                                           ).astype(jnp.int32))
+            return sc, st, bt, qs, tel, fs, out
 
         # _recorded: each trace of the epoch program logs "online_epoch" to
         # planning.compile_log sinks -- the steady-state compile-once
         # property is asserted against this, exactly like the engine kinds.
+        # The fault rates (arg 2) are NOT donated: the same operand tuple
+        # re-enters every epoch (and swapping it is how the benchmark
+        # sweeps outage rates without retracing).
         return jax.jit(_recorded(epoch, "online_epoch"),
-                       donate_argnums=(2, 3, 4, 5, 6))
+                       donate_argnums=(3, 4, 5, 6, 7, 8))
 
     # -- episode driving ---------------------------------------------------
+    def set_fault_rates(self, cfg: FaultConfig) -> None:
+        """Swap the fault mix mid-episode. The rates are operands of the
+        compiled epoch program (same avals for every config), so this never
+        retraces -- the chaos benchmark's outage-rate sweep is this call."""
+        self.fault_cfg = cfg
+        self._rates = cfg.rates()
+
+    def _fallback(self, env) -> SplitPlan:
+        """The ladder's rung-3 plan, cast to engine-plan avals (so serving
+        it never retraces the epoch program) by a jitted program that is
+        warmed at reset -- a mid-episode escalation traces nothing."""
+        if self._fb_jit is None:
+            w = (self.engine.weights if self.engine.weights is not None
+                 else make_weights(self.scenario.cfg.n_users))
+            mode = self.ladder.cfg.fallback
+            template = self._plan_template
+            prof = self.engine.prof
+
+            def fb(env):
+                return degradelib.fallback_plan(env, prof, w,
+                                                template=template, mode=mode)
+
+            self._fb_jit = jax.jit(_recorded(fb, "fallback_plan"))
+        return self._fb_jit(env)
+
     def reset(self, key: jax.Array) -> None:
-        """Initialize scenario/stream/batch/QoS/telemetry state and take the
-        initial (cold) plan. The telemetry starts at the static profile, so
-        feedback and static arms are identical until load appears."""
+        """Initialize scenario/stream/batch/QoS/telemetry/fault state and
+        take the initial (cold) plan. The telemetry starts at the static
+        profile, so feedback and static arms are identical until load
+        appears. Hardened loops also warm the fallback-plan program here,
+        so a mid-episode ladder escalation traces nothing."""
         k_sc, k_st, self._key = jax.random.split(key, 3)
         self._sc = self.scenario.init(k_sc)
         self._st = self.stream.init(k_st)
         self._bt = self.batcher.init()
         self._qs = self.qos.init()
         self._tel = self.telemetry.init()
+        self._fs = injectors.init_fault_state(self.scenario.cfg.n_users,
+                                              self.scenario.cfg.n_aps)
         env0 = self.scenario.env(self._sc)
+        if self._hardened:
+            # Engine-plan avals without executing the solver: the fallback
+            # template (and the epoch program's stability across the
+            # planner -> fallback -> planner switches) comes from
+            # eval_shape of the cold-plan program.
+            plan_fn = self.engine.program("plan", env0)
+            shapes = jax.eval_shape(
+                plan_fn, *self.engine.program_args("plan", env0))
+            self._plan_template = shapes.plan
         self.server.observe(env0)          # epoch 0 is always scheduled
-        self._plan = self.server.state.plan
+        if self.ladder is not None:
+            self.ladder.post_replan(self.server.last_plan_ok,
+                                    self.server.last_replanned)
+        if self.server.state is not None:
+            self._plan = self.server.state.plan
+            if self._hardened:
+                jax.block_until_ready(self._fallback(env0).utility)  # warm
+        else:
+            # The very first plan was rejected by the guard: serve the
+            # baseline fallback until the ladder recovers a real plan.
+            self._plan = self._fallback(env0)
+        if self.feedback:
+            self.measured_profile()        # warm the profile rebuild
 
     def measured_profile(self) -> ModelProfile:
         """The telemetry's current measured profile (a planner operand)."""
         return self.telemetry.profile(self._tel)
 
+    def epoch_args(self) -> tuple:
+        """The epoch program's current operand tuple (post-reset), for
+        trace-only audits (analysis.fault_audit)."""
+        return (self._key, self._plan, self._rates, self._sc, self._st,
+                self._bt, self._qs, self._tel, self._fs)
+
+    def _step_epoch_inner(self) -> tuple[EpochOut, bool]:
+        (self._sc, self._st, self._bt, self._qs, self._tel, self._fs,
+         out) = self._epoch(self._key, self._plan, self._rates, self._sc,
+                            self._st, self._bt, self._qs, self._tel,
+                            self._fs)
+        trigger = bool(out.report.trigger)   # the per-epoch decision sync
+        if self.ladder is None:
+            prof = self.measured_profile() if self.feedback else None
+            self.server.observe(out.env, prof=prof, force=trigger)
+            self._plan = self.server.state.plan
+            return out, trigger
+        # Hardened path: one extra scalar (the packed health word) feeds
+        # the ladder; the ladder shapes the replan and the served plan.
+        dec = self.ladder.pre_replan(int(out.health))
+        if dec.force_cold:
+            self.server.reset_warm()
+        prof = (self.measured_profile()
+                if self.feedback and dec.use_measured else None)
+        self.server.observe(out.env, prof=prof,
+                            force=trigger or dec.force, hold=dec.hold)
+        self.ladder.post_replan(self.server.last_plan_ok,
+                                self.server.last_replanned)
+        if self.server.state is None or self.ladder.serve_fallback:
+            self._plan = self._fallback(out.env)
+        else:
+            self._plan = self.server.state.plan
+        return out, trigger
+
     def step_epoch(self) -> tuple[EpochOut, bool]:
         """One closed-loop epoch. Returns the device-resident EpochOut and
         whether a QoS trigger forced an off-schedule replan (the host-side
-        decision read)."""
-        (self._sc, self._st, self._bt, self._qs, self._tel,
-         out) = self._epoch(self._key, self._plan, self._sc, self._st,
-                            self._bt, self._qs, self._tel)
-        trigger = bool(out.report.trigger)   # the per-epoch decision sync
-        prof = self.measured_profile() if self.feedback else None
-        self.server.observe(out.env, prof=prof, force=trigger)
-        self._plan = self.server.state.plan
-        return out, trigger
+        decision read). Hardened loops run under the epoch watchdog: an
+        overrun keeps its result (state stays consistent) but escalates
+        the ladder."""
+        if self._watchdog is None:
+            return self._step_epoch_inner()
+        result, fired = self._watchdog.guard(self._step_epoch_inner)
+        if fired and self.ladder is not None:
+            self.ladder.on_timeout()
+        return result
 
     def run(self, key: jax.Array, n_epochs: int,
             record: bool = False) -> dict:
@@ -249,7 +416,8 @@ class OnlineLoop:
         hist: dict[str, list] = {k: [] for k in
                                  ("s", "p50", "p95", "miss_rate", "occupancy",
                                   "backlog", "completed", "congestion",
-                                  "trigger")}
+                                  "trigger", "health", "faulted",
+                                  "plan_finite", "stage")}
         for _ in range(n_epochs):
             out, trigger = self.step_epoch()
             if record:
@@ -262,6 +430,14 @@ class OnlineLoop:
                 hist["completed"].append(int(out.completed))
                 hist["congestion"].append(float(out.congestion))
                 hist["trigger"].append(bool(trigger))
+                hist["health"].append(int(out.health))
+                hist["faulted"].append(int(out.faulted))
+                # Was the plan on the air this epoch finite? The chaos
+                # benchmark's "no NaN plans served" gate reads this.
+                hist["plan_finite"].append(
+                    bool(jnp.isfinite(self._plan.utility)))
+                hist["stage"].append(self.ladder.stage if self.ladder
+                                     else "normal")
         m = self.metrics()
         if record:
             m["history"] = hist
@@ -274,8 +450,10 @@ class OnlineLoop:
             "offered": int(self._st.offered),
             "completed": int(self._bt.completed),
             "dropped": int(self._bt.dropped),
+            "shed": int(self._bt.shed),
             "served": int(self._qs.served),
             "deadline_missed": int(self._qs.missed),
+            "goodput": int(self._qs.good),
             "qos_triggers": int(self._qs.triggers),
             "epochs": int(self._st.epoch),
             "duration_s": float(self._st.epoch) * self.stream_cfg.epoch_dt_s,
@@ -283,4 +461,7 @@ class OnlineLoop:
         dur = max(m["duration_s"], 1e-9)
         m["requests_per_s"] = m["completed"] / dur
         m["offered_per_s"] = m["offered"] / dur
+        m["goodput_per_s"] = m["goodput"] / dur
+        if self.ladder is not None:
+            m.update(self.ladder.metrics())
         return m

@@ -37,6 +37,13 @@ class QosConfig:
     window: int = 256
     miss_decay: float = 0.9
     cooldown_epochs: int = 10
+    # Harden the monitor against corrupt latencies (fault injection): a
+    # non-finite latency counts as a deadline miss and enters the ring as a
+    # breaching-but-finite sentinel. Without this, one NaN latency poisons
+    # the percentile ring -- every comparison against it is False and the
+    # QoS trigger goes silently blind, which is exactly the no-ladder
+    # failure mode benchmarks/chaos_serve.py records.
+    guard_nonfinite: bool = False
 
 
 class QosState(NamedTuple):
@@ -46,6 +53,7 @@ class QosState(NamedTuple):
     miss: Array       # (U,) per-user deadline-miss EMA
     served: Array     # () int32 completions seen
     missed: Array     # () int32 deadline misses seen
+    good: Array       # () int32 finite, in-deadline completions (goodput)
     cooldown: Array   # () int32 epochs until the trigger can re-fire
     triggers: Array   # () int32 times the trigger fired
 
@@ -64,6 +72,18 @@ def qos_update(cfg: QosConfig, state: QosState,
                comp: Completions) -> tuple[QosState, QosReport]:
     """Pure one-epoch update (composable inside a larger jitted program)."""
     w = state.lat.shape[0]
+
+    finite = jnp.isfinite(comp.latency)
+    good = state.good + jnp.sum(
+        comp.valid & finite & (comp.latency <= cfg.deadline_s)
+    ).astype(jnp.int32)
+    if cfg.guard_nonfinite:
+        # Corrupt latencies become a finite sentinel that is guaranteed to
+        # breach (and a miss, below): the monitor reacts instead of going
+        # blind on NaN comparisons.
+        sentinel = jnp.float32(2.0 * max(cfg.p95_max_s, cfg.deadline_s))
+        comp = comp._replace(latency=jnp.where(finite, comp.latency,
+                                               sentinel))
 
     # Ring-write this epoch's completions (at most B of them).
     def push(carry, x):
@@ -118,7 +138,7 @@ def qos_update(cfg: QosConfig, state: QosState,
                          jnp.maximum(state.cooldown - 1, 0))
 
     new = QosState(lat=lat, valid=valid, head=head, miss=miss, served=served,
-                   missed=missed, cooldown=cooldown,
+                   missed=missed, good=good, cooldown=cooldown,
                    triggers=state.triggers + trigger.astype(jnp.int32))
     return new, QosReport(p50=p50, p95=p95, miss_rate=miss_rate,
                           trigger=trigger)
@@ -140,6 +160,7 @@ class QosMonitor:
             miss=jnp.zeros((self.n_users,), jnp.float32),
             served=jnp.int32(0),
             missed=jnp.int32(0),
+            good=jnp.int32(0),
             cooldown=jnp.int32(0),
             triggers=jnp.int32(0),
         )

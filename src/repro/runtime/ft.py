@@ -42,6 +42,13 @@ class Watchdog:
         self._timer.cancel()
         return False
 
+    @property
+    def fired(self) -> bool:
+        """Non-raising read of the timer state: the serving path
+        (faults.degrade.EpochWatchdog) keeps the overrunning epoch's result
+        and escalates a ladder instead of unwinding to a checkpoint."""
+        return self._fired.is_set()
+
     def check(self):
         if self._fired.is_set():
             raise StepTimeout(f"step exceeded {self.timeout_s}s")
@@ -66,11 +73,20 @@ class StragglerDetector:
 
 
 def run_with_retries(step_once, n_steps: int, restore_fn, max_retries: int = 3,
-                     step_timeout_s: float = 600.0, on_straggler=None):
+                     step_timeout_s: float = 600.0, on_straggler=None,
+                     retryable: tuple[type[BaseException], ...] = ()):
     """Generic fault-tolerant loop. step_once(i) runs one step and must be
     idempotent-from-checkpoint; restore_fn() rewinds state after a failure.
-    Returns (completed_steps, retries_used, straggler_steps)."""
+    Returns (completed_steps, retries_used, straggler_steps).
+
+    Only StepTimeout plus the caller's explicit ``retryable`` allowlist is
+    retried. Anything else propagates immediately: a bare RuntimeError here
+    is usually XLA reporting a compile/OOM/device error, and restoring a
+    checkpoint to re-run into the same error ``max_retries`` times masks
+    the real failure (and can silently burn the retry budget)."""
     det = StragglerDetector()
+    retry_types: tuple[type[BaseException], ...] = (StepTimeout,
+                                                    *tuple(retryable))
     retries = 0
     i = 0
     while i < n_steps:
@@ -83,7 +99,7 @@ def run_with_retries(step_once, n_steps: int, restore_fn, max_retries: int = 3,
             if det.record(dt) and on_straggler is not None:
                 on_straggler(i, dt)
             i += 1
-        except (StepTimeout, RuntimeError) as e:
+        except retry_types:
             retries += 1
             if retries > max_retries:
                 raise

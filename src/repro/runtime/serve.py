@@ -194,16 +194,27 @@ class OnlineSplitServer:
     subchannel count) invalidates that state: observe() catches the engine's
     shape-change ValueError, resets the warm state, and re-plans cold --
     `cold_resets` counts these events.
+
+    With ``guard_plans=True`` (the default) the same one-scalar sync also
+    traps *non-finite or infeasible* plans: the in-jit health check
+    (faults.guards.plan_word) packs the plan's health bits above s* in the
+    synced word, a bad plan is rejected and the last good PlanState held
+    (`bad_plans` counts these, next to `cold_resets`), and the degradation
+    ladder -- not the batcher -- decides what serves next. A NaN measured
+    profile otherwise flows straight through replan into a served plan:
+    utility goes NaN while the power vector can stay finite, so the guard
+    checks the whole plan, not just the powers.
     """
 
     def __init__(self, engine, model: Model | None = None, params=None,
-                 replan_every: int = 1):
+                 replan_every: int = 1, guard_plans: bool = True):
         if replan_every < 1:
             raise ValueError(f"replan_every must be >= 1, got {replan_every}")
         self.engine = engine
         self.model = model
         self.params = params
         self.replan_every = replan_every
+        self.guard_plans = bool(guard_plans)
         self.state = None               # planning.PlanState of the last re-plan
         self.programs: SplitPrograms | None = None
         self.split_layer: int | None = None
@@ -212,7 +223,11 @@ class OnlineSplitServer:
         self.cold_resets = 0
         self.replans = 0                # scheduled + forced engine dispatches
         self.forced_replans = 0         # QoS-triggered (force=True) subset
+        self.bad_plans = 0              # guarded replans rejected (held last good)
+        self.last_plan_ok: bool | None = None   # outcome of the last dispatch
+        self.last_replanned = False     # did the last observe() dispatch?
         self._iters_acc = jnp.zeros((), jnp.int32)  # device-side accumulator
+        self._plan_word_fn = None       # jitted guard, built on first use
 
     @property
     def total_iters(self) -> int:
@@ -232,36 +247,78 @@ class OnlineSplitServer:
             "forced_replans": self.forced_replans,
             "recuts": self.recuts,
             "cold_resets": self.cold_resets,
+            "bad_plans": self.bad_plans,
             "split_layer": self.split_layer,
             "total_iters": self.total_iters,
         }
 
-    def observe(self, env, prof=None, force: bool = False) -> SplitPrograms | None:
+    def reset_warm(self) -> None:
+        """Drop the warm-start payload: the next replan goes cold. The
+        degradation ladder calls this before a degraded-stage retry --
+        after a run of rejected plans the carried moments/optima are
+        themselves suspect."""
+        self.state = None
+
+    def _sync_plan(self, env, plan) -> tuple[int, int]:
+        """The one host sync per replan: (health, s). Guarded servers pack
+        both into a single scalar in-jit (faults.guards.plan_word); the
+        guard program is jitted once per server (env consts are closures,
+        the plan is an operand -- no cache growth across epochs)."""
+        if not self.guard_plans:
+            return 0, int(plan.s)
+        if self._plan_word_fn is None:
+            from repro.faults import guards
+            from repro.planning.engine import _recorded
+            self._plan_word_fn = jax.jit(_recorded(functools.partial(
+                guards.plan_word, n_sub=env.n_sub,
+                p_up_max=env.radio.p_up_max_w, p_dn_max=env.radio.p_dn_max_w,
+                r_max=env.comp.r_max), "plan_guard"))
+        from repro.faults.guards import split_plan_word
+        return split_plan_word(int(self._plan_word_fn(plan)))
+
+    def observe(self, env, prof=None, force: bool = False,
+                hold: bool = False) -> SplitPrograms | None:
         """Advance one epoch: re-plan on schedule (or immediately when
         ``force`` is set -- the QoS monitor's trigger path), re-cut if s*
         moved. ``prof`` substitutes a measured profile (repro.online
         telemetry) as an operand of the engine's already-compiled programs;
-        None plans against the engine's static profile."""
-        if force or self.epoch % self.replan_every == 0:
+        None plans against the engine's static profile. ``hold`` skips the
+        replan outright (the ladder's backoff posture) while still
+        advancing the epoch clock."""
+        self.last_replanned = False
+        if not hold and (force or self.epoch % self.replan_every == 0):
+            prev_state = self.state
             try:
-                self.state = self.engine.replan(self.state, env, prof=prof)
+                new_state = self.engine.replan(self.state, env, prof=prof)
             except WarmStateShapeError:
                 # Shape change: the warm-start state no longer fits this
                 # network. Reset it and fall back to a cold plan. (Other
                 # ValueErrors propagate -- swallowing them would silently
                 # disable warm starts forever.)
-                self.state = None
+                prev_state = self.state = None
                 self.cold_resets += 1
-                self.state = self.engine.plan(env, prof=prof)
+                new_state = self.engine.plan(env, prof=prof)
             self.replans += 1
+            self.last_replanned = True
             self.forced_replans += int(
                 force and self.epoch % self.replan_every != 0)
-            self._iters_acc = self._iters_acc + self.state.total_iters
-            s = int(self.state.plan.s)  # the one host sync: re-cut decision
-            if s != self.split_layer:
-                self.split_layer = s
-                self.recuts += 1
-                if self.model is not None:
-                    self.programs = make_split_serve(self.model, self.params, s)
+            self._iters_acc = self._iters_acc + new_state.total_iters
+            health, s = self._sync_plan(env, new_state.plan)
+            if health:
+                # Rung 1 of the ladder: never serve a corrupt plan. Keep
+                # the last good state (warm payload included) and let the
+                # ladder decide the follow-up posture.
+                self.bad_plans += 1
+                self.last_plan_ok = False
+                self.state = prev_state
+            else:
+                self.last_plan_ok = True
+                self.state = new_state
+                if s != self.split_layer:
+                    self.split_layer = s
+                    self.recuts += 1
+                    if self.model is not None:
+                        self.programs = make_split_serve(self.model,
+                                                         self.params, s)
         self.epoch += 1
         return self.programs

@@ -1,0 +1,356 @@
+"""repro.faults: seeded injectors, packed health guards, the degradation
+ladder, the guaranteed-finite fallback plan, and the hardened closed loop
+(plan rejection, telemetry quarantine, shedding, zero-recompile injection)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import channel, make_weights, profiles
+from repro.core.types import GdConfig
+from repro.faults import (
+    PLAN_MASK,
+    TELEMETRY_MASK,
+    DegradeLadder,
+    FaultConfig,
+    LadderConfig,
+    apply_env_faults,
+    corrupt_observation,
+    decode_health,
+    fallback_plan,
+    fault_step,
+    init_fault_state,
+    plan_health,
+    plan_word,
+    spike_service,
+    split_plan_word,
+    telemetry_health,
+)
+from repro.online import OnlineLoop, ServiceConfig, StreamConfig
+from repro.online.telemetry import Observation, Telemetry
+from repro.planning import PlannerEngine, compile_log
+from repro.scenarios import Scenario, ScenarioConfig
+
+ADAM_CFG = GdConfig(step_size=3e-2, eps=1e-4, max_iters=40, optimizer="adam")
+SCEN = ScenarioConfig(n_users=6, n_aps=2, n_sub=3, fading_rho=0.95)
+STREAM = StreamConfig(arrival_rate_hz=25.0, epoch_dt_s=0.02, deadline_s=0.2)
+SERVICE = ServiceConfig(edge_capacity=4, queue_depth=16, load_gain=4.0,
+                        replan_every=3, max_work_epochs=200)
+CHAOS = FaultConfig(link_outage_rate=0.2, fade_depth=1e-6,
+                    ap_outage_rate=0.05, telemetry_drop_rate=0.1,
+                    telemetry_spike_rate=0.05, service_spike_rate=0.02)
+
+
+def _env(seed=0):
+    return channel.make_env(jax.random.PRNGKey(seed), n_users=6, n_aps=2,
+                            n_sub=3)
+
+
+def _hardened(faults=CHAOS, degrade=LadderConfig(), **kw):
+    eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+    return OnlineLoop(Scenario(SCEN), eng, STREAM, SERVICE, faults=faults,
+                      degrade=degrade, **kw)
+
+
+class TestInjectors:
+    def test_deterministic_from_key(self):
+        rates = CHAOS.rates()
+        st = init_fault_state(6, 2)
+        key = jax.random.PRNGKey(42)
+        s1, d1 = fault_step(rates, key, st)
+        s2, d2 = fault_step(rates, key, st)
+        for a, b in zip(jax.tree.leaves((s1, d1)), jax.tree.leaves((s2, d2))):
+            assert jnp.array_equal(a, b)
+
+    def test_zero_config_is_identity(self):
+        rates = FaultConfig().rates()
+        st = init_fault_state(6, 2)
+        st, draw = fault_step(rates, jax.random.PRNGKey(0), st)
+        assert not bool(jnp.any(draw.link_down))
+        assert not bool(jnp.any(draw.ap_down))
+        assert not bool(draw.tel_drop) and not bool(draw.tel_spike)
+        env = _env()
+        env2 = apply_env_faults(env, draw, rates)
+        assert jnp.array_equal(env.g_up, env2.g_up)
+        assert jnp.array_equal(env.g_dn, env2.g_dn)
+        svc = jnp.ones((6,))
+        assert jnp.array_equal(spike_service(svc, draw), svc)
+
+    def test_markov_outage_persists(self):
+        # mean_epochs >> 1: a faded user usually stays faded next epoch.
+        cfg = FaultConfig(link_outage_rate=0.3, link_mean_epochs=50.0)
+        rates = cfg.rates()
+        st = init_fault_state(64, 2)
+        key = jax.random.PRNGKey(1)
+        stays = total = 0
+        for i in range(60):
+            prev = st.link_down
+            st, _ = fault_step(rates, jax.random.fold_in(key, i), st)
+            stays += int(jnp.sum(prev & st.link_down))
+            total += int(jnp.sum(prev))
+        assert total > 0
+        assert stays / total > 0.9      # recover prob is 1/50
+
+    def test_stationary_outage_fraction(self):
+        cfg = FaultConfig(link_outage_rate=0.2, link_mean_epochs=8.0)
+        rates = cfg.rates()
+        st = init_fault_state(256, 2)
+        key = jax.random.PRNGKey(2)
+        frac = []
+        for i in range(300):
+            st, _ = fault_step(rates, jax.random.fold_in(key, i), st)
+            if i >= 50:                  # past burn-in
+                frac.append(float(jnp.mean(st.link_down)))
+        assert abs(sum(frac) / len(frac) - 0.2) < 0.05
+
+    def test_ap_blackout_zeroes_cell(self):
+        rates = CHAOS.rates()
+        _, draw = fault_step(rates, jax.random.PRNGKey(0),
+                             init_fault_state(6, 2))
+        draw = draw._replace(ap_down=jnp.array([True, False]),
+                             link_down=jnp.zeros((6,), bool))
+        env = apply_env_faults(_env(), draw, rates)
+        assert bool(jnp.all(env.g_up[:, 0, :] == 0.0))
+        assert bool(jnp.all(env.g_dn[0, :, :] == 0.0))
+        assert bool(jnp.all(env.g_up[:, 1, :] > 0.0))
+
+    def test_corrupt_observation_drop_and_spike(self):
+        obs = Observation(t_layer=jnp.ones((4,)), t_up=jnp.float32(1.0),
+                          rate_up=jnp.float32(1e6), rate_dn=jnp.float32(1e6),
+                          r_units=jnp.float32(2.0))
+        rates = CHAOS.rates()
+        _, draw = fault_step(rates, jax.random.PRNGKey(0),
+                             init_fault_state(6, 2))
+        dropped = corrupt_observation(
+            obs, draw._replace(tel_drop=jnp.bool_(True),
+                               tel_spike=jnp.bool_(False)), rates)
+        assert bool(jnp.all(jnp.isnan(dropped.t_layer)))
+        spiked = corrupt_observation(
+            obs, draw._replace(tel_drop=jnp.bool_(False),
+                               tel_spike=jnp.bool_(True)), rates)
+        assert jnp.allclose(spiked.t_layer,
+                            obs.t_layer * CHAOS.telemetry_spike_scale)
+
+
+class TestGuards:
+    def _plan(self):
+        eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+        return eng.plan(_env()).plan, _env()
+
+    def _health(self, plan, env):
+        return int(plan_health(plan, n_sub=env.n_sub,
+                               p_up_max=env.radio.p_up_max_w,
+                               p_dn_max=env.radio.p_dn_max_w,
+                               r_max=env.comp.r_max))
+
+    def test_clean_plan_is_healthy(self):
+        plan, env = self._plan()
+        assert self._health(plan, env) == 0
+
+    def test_nan_utility_sets_plan_bit(self):
+        plan, env = self._plan()
+        bad = dataclasses.replace(plan, utility=jnp.float32(jnp.nan))
+        h = self._health(bad, env)
+        assert h & PLAN_MASK
+        assert decode_health(h)["plan_utility"]
+
+    def test_infeasible_power_sets_power_bit(self):
+        plan, env = self._plan()
+        bad = dataclasses.replace(
+            plan, p_up=plan.p_up.at[0].set(10.0 * env.radio.p_up_max_w))
+        assert decode_health(self._health(bad, env))["plan_power"]
+
+    def test_plan_word_roundtrip(self):
+        plan, env = self._plan()
+        word = int(plan_word(plan, n_sub=env.n_sub,
+                             p_up_max=env.radio.p_up_max_w,
+                             p_dn_max=env.radio.p_dn_max_w,
+                             r_max=env.comp.r_max))
+        health, s = split_plan_word(word)
+        assert health == 0
+        assert s == int(plan.s)
+
+    def test_telemetry_health_bits(self):
+        tel = Telemetry(profiles.nin(), _env().comp, decay=0.5)
+        ts = tel.init()
+        assert int(telemetry_health(ts, kappa_max=100.0)) == 0
+        nan_ts = ts._replace(fl=ts.fl.at[0].set(jnp.nan))
+        h = int(telemetry_health(nan_ts, kappa_max=100.0))
+        assert h & TELEMETRY_MASK
+        assert decode_health(h)["profile"]
+        hot = ts._replace(kappa=jnp.float32(1e4))
+        assert decode_health(int(telemetry_health(hot, 100.0)))["kappa"]
+
+
+class TestLadder:
+    def test_escalation_order_and_backoff(self):
+        lad = DegradeLadder(LadderConfig(baseline_after=2, backoff_base=2,
+                                         backoff_max=8))
+        assert lad.stage == "normal"
+        lad.pre_replan(0)
+        lad.post_replan(plan_ok=False, replanned=True)
+        assert lad.stage == "hold" and not lad.serve_fallback
+        # cooldown=2: one held epoch, then a forced cold retry
+        d = lad.pre_replan(0)
+        assert d.hold and not d.force
+        d = lad.pre_replan(0)
+        assert d.force and d.force_cold
+        lad.post_replan(plan_ok=False, replanned=True)
+        assert lad.stage == "baseline" and lad.serve_fallback
+        assert lad.backoff == 8        # 2 -> 4 -> 8, doubling
+        lad.post_replan(plan_ok=False, replanned=True)
+        assert lad.backoff == 8        # capped at backoff_max
+
+    def test_recovery_counts_epochs(self):
+        lad = DegradeLadder(LadderConfig(baseline_after=2, recover_after=1,
+                                         backoff_base=1))
+        lad.pre_replan(0)
+        lad.post_replan(plan_ok=False, replanned=True)
+        lad.pre_replan(0)
+        lad.pre_replan(0)
+        lad.post_replan(plan_ok=True, replanned=True)
+        assert lad.stage == "normal"
+        m = lad.metrics()
+        assert m["recoveries"] == 1
+        assert m["mean_recovery_epochs"] == 2.0
+        assert lad.backoff == 1        # reset to base on recovery
+
+    def test_held_epochs_carry_no_evidence(self):
+        lad = DegradeLadder(LadderConfig())
+        lad.pre_replan(0)
+        lad.post_replan(plan_ok=None, replanned=False)
+        assert lad.stage == "normal" and lad.bad_streak == 0
+
+    def test_quarantine_countdown(self):
+        cfg = LadderConfig(quarantine_epochs=3)
+        lad = DegradeLadder(cfg)
+        d = lad.pre_replan(TELEMETRY_MASK)
+        assert not d.use_measured
+        assert lad.metrics()["quarantines"] == 1
+        for _ in range(3):
+            d = lad.pre_replan(0)
+        assert d.use_measured          # countdown elapsed
+        # re-corruption re-arms without double-counting a live quarantine
+        lad.pre_replan(TELEMETRY_MASK)
+        lad.pre_replan(TELEMETRY_MASK)
+        assert lad.metrics()["quarantines"] == 2
+
+    def test_timeout_escalates_without_plan_evidence(self):
+        lad = DegradeLadder(LadderConfig(backoff_base=2))
+        lad.on_timeout()
+        assert lad.stage == "hold"
+        assert lad.metrics()["watchdog_fires"] == 1
+
+
+class TestFallbackPlan:
+    def test_finite_under_total_blackout(self):
+        env = _env()
+        dead = dataclasses.replace(env, g_up=jnp.zeros_like(env.g_up),
+                                   g_dn=jnp.zeros_like(env.g_dn))
+        prof = profiles.nin()
+        w = make_weights(env.n_users)
+        # the terminal rung must be finite under ANY channel state,
+        # including zero gains everywhere (full blackout)
+        plan = fallback_plan(dead, prof, w, mode="device_only")
+        assert bool(jnp.isfinite(plan.utility))
+        assert int(plan.s) == prof.n_layers
+        # the offload twin under a healthy channel
+        plan = fallback_plan(env, prof, w, mode="edge_only")
+        assert bool(jnp.isfinite(plan.utility))
+        assert int(plan.s) == 0
+
+    def test_aval_parity_with_engine_plan(self):
+        env = _env()
+        eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+        template = eng.plan(env).plan
+        w = make_weights(env.n_users)
+        fb = fallback_plan(env, profiles.nin(), w, template=template)
+        ref = jax.eval_shape(lambda: template)
+        got = jax.eval_shape(lambda: fb)
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+            assert (a.shape, a.dtype) == (b.shape, b.dtype)
+
+    def test_rejects_unknown_mode(self):
+        with pytest.raises(ValueError):
+            fallback_plan(_env(), profiles.nin(), make_weights(6),
+                          mode="pray")
+
+
+class TestServerGuard:
+    def test_nan_profile_plan_rejected_and_held(self):
+        """A NaN measured profile produces a NaN-utility plan; the guarded
+        server must reject it via the packed word, hold the last good
+        state, and count it -- the loop's plan on the air stays finite."""
+        from repro.runtime.serve import OnlineSplitServer
+
+        env = _env()
+        eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+        srv = OnlineSplitServer(eng, replan_every=1, guard_plans=True)
+        srv.observe(env)                          # cold plan, clean
+        good = srv.state
+        assert srv.last_plan_ok and srv.bad_plans == 0
+        p = eng.prof
+        nan_prof = p.like(p.fl * jnp.nan, p.w, p.m_down)
+        srv.observe(env, prof=nan_prof)
+        assert srv.bad_plans == 1
+        assert srv.last_plan_ok is False
+        assert srv.state is good                  # held, not replaced
+        assert bool(jnp.isfinite(srv.state.plan.utility))
+
+    def test_unguarded_server_serves_the_nan(self):
+        from repro.runtime.serve import OnlineSplitServer
+
+        env = _env()
+        eng = PlannerEngine(profiles.nin(), cfg=ADAM_CFG)
+        srv = OnlineSplitServer(eng, replan_every=1, guard_plans=False)
+        srv.observe(env)
+        p = eng.prof
+        srv.observe(env, prof=p.like(p.fl * jnp.nan, p.w, p.m_down))
+        assert srv.bad_plans == 0                 # nothing trapped it
+        assert not bool(jnp.isfinite(srv.state.plan.utility))
+
+
+class TestHardenedLoop:
+    def test_conserves_requests_including_shed(self):
+        loop = _hardened()
+        m = loop.run(jax.random.PRNGKey(2), 40)
+        in_flight = int(jnp.sum(loop._bt.active))
+        queued = int(loop._bt.q_size)
+        assert m["offered"] == (m["completed"] + m["dropped"] + m["shed"]
+                                + in_flight + queued)
+        assert m["goodput"] <= m["completed"]
+
+    def test_every_served_plan_finite_under_chaos(self):
+        m = _hardened().run(jax.random.PRNGKey(7), 50, record=True)
+        assert all(m["history"]["plan_finite"])
+
+    def test_zero_fault_hardened_matches_plain(self):
+        """With a zero fault config the hardened loop's traffic outcomes
+        equal the plain loop's: injection is an exact identity and the
+        ladder never engages."""
+        plain = OnlineLoop(Scenario(SCEN),
+                           PlannerEngine(profiles.nin(), cfg=ADAM_CFG),
+                           STREAM, SERVICE)
+        # shed_service_factor=0: admission shedding off, so the only
+        # remaining differences are the (identity) injectors and guards
+        hard = _hardened(faults=FaultConfig(),
+                         degrade=LadderConfig(shed_service_factor=0.0))
+        m_p = plain.run(jax.random.PRNGKey(3), 30, record=True)
+        m_h = hard.run(jax.random.PRNGKey(3), 30, record=True)
+        assert m_p["completed"] == m_h["completed"]
+        assert m_p["offered"] == m_h["offered"]
+        assert m_h["bad_plans"] == 0 and m_h["quarantines"] == 0
+        assert m_p["history"]["s"] == m_h["history"]["s"]
+
+    def test_rate_swap_traces_nothing(self):
+        loop = _hardened()
+        loop.reset(jax.random.PRNGKey(0))
+        for _ in range(10):
+            loop.step_epoch()
+        with compile_log() as log:
+            loop.set_fault_rates(FaultConfig(link_outage_rate=0.5,
+                                             telemetry_drop_rate=0.3))
+            for _ in range(6):
+                loop.step_epoch()
+        assert log == []

@@ -161,3 +161,61 @@ def test_masked_batching_matches_sequential_serving():
         assert float(jnp.max(jnp.abs(lg2[i] - refs[i][2]))) < 5e-2, i
     lg3 = db.step(tok2, jnp.array([False, True, False]))
     assert float(jnp.max(jnp.abs(lg3[1] - refs[1][2]))) < 5e-2
+
+
+def test_mid_decode_dropout_frees_slot_without_perturbing_siblings():
+    """Satellite: a user departing mid-decode (link fade, app kill) is a
+    permanent mask-off, not a cache teardown -- the surviving slots'
+    trajectories must stay bit-for-bit on their sequential references
+    through the departure, and the vacated slot must be re-admittable
+    with a fresh request whose decode matches its own uninterrupted
+    reference (no contamination from the departed request's frozen KV)."""
+    arch = configs.get("qwen1.5-0.5b").reduced()
+    model = Model(arch, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s_len, v = 3, 8, arch.vocab_size
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s_len), 0, v)
+    new_toks = jax.random.randint(jax.random.PRNGKey(2), (1, s_len), 0, v)
+
+    def reference(t, n_steps):
+        prefill = jax.jit(lambda p, tk: model.prefill(p, {"tokens": tk},
+                                                      s_len + 6))
+        lg, caches = prefill(params, t)
+        steps = [lg[0]]
+        tok = jnp.argmax(lg, -1)[:, None]
+        for _ in range(n_steps):
+            lg, caches = model.decode_step(params, caches, tok)
+            steps.append(lg[0])
+            tok = jnp.argmax(lg, -1)[:, None]
+        return steps
+
+    refs = [reference(toks[i:i + 1], 3) for i in range(b)]
+    new_ref = reference(new_toks, 1)
+
+    db = DecodeBatcher(model, params, capacity=b, max_len=s_len + 6)
+    for i in range(b):
+        pre = db.admit(i, toks[i:i + 1])
+        assert float(jnp.max(jnp.abs(pre - refs[i][0]))) < 5e-2
+    greedy = lambda k: jnp.stack(  # noqa: E731
+        [jnp.argmax(r[k]) for r in refs])[:, None]
+
+    # epoch 1: all three decode together
+    lg1 = db.step(greedy(0), jnp.array([True, True, True]))
+    for i in range(b):
+        assert float(jnp.max(jnp.abs(lg1[i] - refs[i][1]))) < 5e-2, i
+
+    # user 1 departs mid-decode: two more epochs with its lane masked off;
+    # the survivors must not feel it
+    for k in (1, 2):
+        lg = db.step(greedy(k), jnp.array([True, False, True]))
+        for i in (0, 2):
+            assert float(jnp.max(jnp.abs(lg[i] - refs[i][k + 1]))) < 5e-2, i
+
+    # the vacated slot re-admits a brand-new request: its prefill and
+    # first decode step match the fresh sequential reference exactly
+    pre = db.admit(1, new_toks)
+    assert float(jnp.max(jnp.abs(pre - new_ref[0]))) < 5e-2
+    tok_new = jnp.zeros((b, 1), greedy(0).dtype).at[1, 0].set(
+        jnp.argmax(new_ref[0]))
+    lg_new = db.step(tok_new, jnp.array([False, True, False]))
+    assert float(jnp.max(jnp.abs(lg_new[1] - new_ref[1]))) < 5e-2

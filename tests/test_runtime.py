@@ -168,7 +168,8 @@ def test_run_with_retries_recovers():
         return 1  # rewind to step 1
 
     done, retries, _ = ft.run_with_retries(step_once, 5, restore,
-                                           step_timeout_s=60.0)
+                                           step_timeout_s=60.0,
+                                           retryable=(RuntimeError,))
     assert done == 5 and retries == 1 and calls["restores"] == 1
 
 
