@@ -64,6 +64,7 @@ def main() -> None:
         paper_fig2_3,
         paper_fig4_5,
         paper_fig6_11,
+        recovery_serve,
         roofline_report,
     )
 
@@ -77,6 +78,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "online_serve": online_serve.run,
         "chaos_serve": chaos_serve.run,
+        "recovery_serve": recovery_serve.run,
     }
     chosen = (args.only.split(",") if args.only else list(all_benches))
     t0 = time.time()

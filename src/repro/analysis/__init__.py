@@ -27,6 +27,11 @@ from repro.analysis.online_audit import (  # noqa: F401
     online_feedback_probe,
     online_loop_probe,
 )
+from repro.analysis.recovery_audit import (  # noqa: F401
+    audit_recovery,
+    resume_probe,
+    retrace_probe,
+)
 from repro.analysis.report import (  # noqa: F401
     AuditError,
     AuditReport,

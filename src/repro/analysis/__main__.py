@@ -31,6 +31,7 @@ from repro.analysis.online_audit import (
     online_feedback_probe,
     online_loop_probe,
 )
+from repro.analysis.recovery_audit import audit_recovery
 from repro.analysis.report import AuditReport
 from repro.core import make_env, make_weights, profiles
 from repro.core.types import GdConfig
@@ -108,8 +109,11 @@ def main(argv: list[str] | None = None) -> int:
         # epoch program (rates are operands) and the guard chain must keep
         # every served plan finite without host-side checks
         report.merge(audit_faults(label="runtime"))
+        # durable serving: crash + restore must be bit-exact, mint zero
+        # steady-state compiles, and replay cleanly from the journal
+        report.merge(audit_recovery(label="runtime"))
         print("ran runtime probes (compile log, transfer guard, cache "
-              "keys, online feedback, online loop, chaos loop)")
+              "keys, online feedback, online loop, chaos loop, recovery)")
 
     payload = report.to_dict()
     payload["presets"] = list(args.presets)

@@ -1,1 +1,8 @@
-from repro.checkpoint.manager import CheckpointManager, load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    SnapshotIntegrityError,
+    leaf_crc32,
+    list_steps,
+    load_checkpoint,
+    save_checkpoint,
+)

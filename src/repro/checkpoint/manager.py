@@ -1,8 +1,16 @@
 """Fault-tolerant checkpointing (numpy-based; orbax is not available offline).
 
 Properties:
-  * atomic: writes go to <dir>/tmp.<step> then os.replace -> step_<N>; a
-    crash mid-write never corrupts the latest checkpoint.
+  * atomic: writes go to <dir>/tmp.<step>, then are *promoted* into
+    step_<N>. Promotion never opens a lost-update window: an existing
+    step_<N> is renamed aside (atomic), the tmp dir os.replace's into
+    place (atomic), and only then is the aside removed. A crash at any
+    instant leaves either the old copy (possibly under the aside name --
+    repaired by the next reader/writer) or the new one, never neither.
+  * validated: meta.json records the treedef string, per-leaf dtypes,
+    shapes and CRC-32s; load_checkpoint verifies all of them against the
+    caller's `tree_like` and the bytes actually read, raising
+    SnapshotIntegrityError instead of silently mis-unflattening.
   * async: save() returns immediately, a background thread serializes; the
     train loop keeps stepping (snapshot is taken on the caller's thread via
     jax.device_get so the arrays are immutable).
@@ -16,11 +24,25 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
+import zlib
+from typing import Any
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d{8})")
+_ASIDE_SUFFIX = ".aside"
+
+
+class SnapshotIntegrityError(RuntimeError):
+    """On-disk checkpoint/snapshot data does not match what the caller
+    expects (treedef / dtype / shape mismatch, checksum failure, missing or
+    unreadable shards). Raised instead of silently mis-unflattening; the
+    crash supervisor treats it as "this snapshot is corrupt, fall back to
+    an older one"."""
 
 
 def _flatten(tree):
@@ -28,46 +50,162 @@ def _flatten(tree):
     return flat, treedef
 
 
+def _promote(tmp: str, final: str) -> None:
+    """Atomically promote ``tmp`` over ``final`` even when ``final`` exists.
+
+    ``os.replace`` cannot replace a non-empty directory, and the obvious
+    rmtree-then-replace opens a crash window in which the only copy is
+    gone. Rename-aside closes it: the old final moves to ``<final>.aside``
+    (atomic), tmp replaces final (atomic), then the aside is deleted.
+    ``_recover`` repairs a crash between the renames."""
+    aside = final + _ASIDE_SUFFIX
+    if os.path.exists(aside):            # stale aside from an old crash
+        shutil.rmtree(aside)
+    had_old = os.path.exists(final)
+    if had_old:
+        os.rename(final, aside)
+    os.replace(tmp, final)
+    if had_old:
+        shutil.rmtree(aside, ignore_errors=True)
+
+
+def _recover(directory: str) -> None:
+    """Repair interrupted promotions: a stranded ``<final>.aside`` whose
+    final is missing is renamed back into place (the crash hit between the
+    two renames); one whose final exists is a superseded copy and is
+    removed. Idempotent; called by every reader and writer."""
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return
+    for name in names:
+        if not name.endswith(_ASIDE_SUFFIX):
+            continue
+        final = os.path.join(directory, name[: -len(_ASIDE_SUFFIX)])
+        aside = os.path.join(directory, name)
+        if os.path.exists(final):
+            shutil.rmtree(aside, ignore_errors=True)
+        else:
+            os.rename(aside, final)
+
+
+def list_steps(directory: str) -> list[int]:
+    """Step numbers of complete checkpoints under ``directory``, ascending.
+    Only exact ``step_<8 digits>`` names count -- tmp dirs and asides are
+    never mistaken for checkpoints."""
+    _recover(directory)
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return []
+    return sorted(int(m.group(1)) for n in names
+                  if (m := _STEP_RE.fullmatch(n)))
+
+
+def leaf_crc32(a: np.ndarray) -> int:
+    """Content checksum of one leaf (dtype/shape are recorded separately)."""
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 def save_checkpoint(directory: str, step: int, tree, process_index: int = 0):
     os.makedirs(directory, exist_ok=True)
+    _recover(directory)
     tmp = os.path.join(directory, f"tmp.{step}.{process_index}")
     final = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(tmp, exist_ok=True)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     flat, treedef = _flatten(tree)
     arrays = {f"a{i}": np.asarray(jax.device_get(x)) for i, x in enumerate(flat)}
-    np.savez(os.path.join(tmp, f"shard_{process_index}.npz"), **arrays)
     meta = {
         "step": int(step),
         "treedef": str(treedef),
         "n_leaves": len(flat),
         "dtypes": [str(a.dtype) for a in arrays.values()],
         "shapes": [list(a.shape) for a in arrays.values()],
+        "crc32s": [leaf_crc32(a) for a in arrays.values()],
     }
+    np.savez(os.path.join(tmp, f"shard_{process_index}.npz"), **arrays)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+    _promote(tmp, final)
     return final
+
+
+def _read_meta(path: str) -> dict[str, Any]:
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotIntegrityError(
+            f"{path}: unreadable meta.json ({e})") from e
+    for key in ("treedef", "n_leaves", "dtypes", "shapes"):
+        if key not in meta:
+            raise SnapshotIntegrityError(f"{path}: meta.json missing {key!r}")
+    return meta
+
+
+def _validate_meta(meta: dict[str, Any], flat: list, treedef, path: str) -> None:
+    """Stored structure must match the caller's ``tree_like`` exactly --
+    a mismatch means the caller would mis-unflatten (or retrace)."""
+    if meta["n_leaves"] != len(flat):
+        raise SnapshotIntegrityError(
+            f"{path}: checkpoint has {meta['n_leaves']} leaves, "
+            f"caller expects {len(flat)}")
+    if meta["treedef"] != str(treedef):
+        raise SnapshotIntegrityError(
+            f"{path}: treedef mismatch\n  stored:   {meta['treedef']}\n"
+            f"  expected: {str(treedef)}")
+    for i, leaf in enumerate(flat):
+        want_dt = np.dtype(jax.numpy.result_type(leaf))
+        want_sh = tuple(jax.numpy.shape(leaf))
+        got_dt = np.dtype(meta["dtypes"][i])
+        got_sh = tuple(meta["shapes"][i])
+        if got_dt != want_dt or got_sh != want_sh:
+            raise SnapshotIntegrityError(
+                f"{path}: leaf {i} is {got_dt}{list(got_sh)}, caller "
+                f"expects {want_dt}{list(want_sh)}")
+
+
+def _load_arrays(path: str, meta: dict[str, Any],
+                 process_index: int = 0) -> list[np.ndarray]:
+    shard = os.path.join(path, f"shard_{process_index}.npz")
+    try:
+        with np.load(shard) as data:
+            loaded = [data[f"a{i}"] for i in range(meta["n_leaves"])]
+    except Exception as e:  # truncated zip, missing member, missing file
+        raise SnapshotIntegrityError(
+            f"{shard}: unreadable or truncated shard ({e})") from e
+    crcs = meta.get("crc32s")
+    for i, a in enumerate(loaded):
+        if (str(a.dtype) != meta["dtypes"][i]
+                or list(a.shape) != meta["shapes"][i]):
+            raise SnapshotIntegrityError(
+                f"{shard}: leaf {i} is {a.dtype}{list(a.shape)}, meta.json "
+                f"says {meta['dtypes'][i]}{meta['shapes'][i]}")
+        if crcs is not None and leaf_crc32(a) != crcs[i]:
+            raise SnapshotIntegrityError(
+                f"{shard}: leaf {i} failed its CRC-32 check")
+    return loaded
 
 
 def load_checkpoint(directory: str, tree_like, step: int | None = None,
                     shardings=None):
     """Restore into the structure of `tree_like`; device_put with `shardings`
-    (pytree of NamedSharding) re-shards for the current mesh (elastic)."""
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(directory)
-        if d.startswith("step_")
-    )
+    (pytree of NamedSharding) re-shards for the current mesh (elastic).
+
+    The stored meta.json (treedef string, per-leaf dtypes/shapes/CRCs) is
+    validated against both `tree_like` and the bytes actually read;
+    any mismatch raises SnapshotIntegrityError."""
+    steps = list_steps(directory)
     if not steps:
         raise FileNotFoundError(f"no checkpoints under {directory}")
     step = steps[-1] if step is None else step
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "shard_0.npz"))
     flat, treedef = _flatten(tree_like)
-    assert len(flat) == len(data.files), (
-        f"checkpoint has {len(data.files)} leaves, model expects {len(flat)}")
-    loaded = [data[f"a{i}"] for i in range(len(flat))]
+    meta = _read_meta(path)
+    _validate_meta(meta, flat, treedef, path)
+    loaded = _load_arrays(path, meta)
     if shardings is not None:
         sflat, _ = _flatten(shardings)
         loaded = [jax.device_put(a, s) for a, s in zip(loaded, sflat)]
@@ -109,21 +247,13 @@ class CheckpointManager:
             raise err
 
     def latest_step(self):
-        try:
-            steps = sorted(
-                int(d.split("_")[1]) for d in os.listdir(self.directory)
-                if d.startswith("step_"))
-            return steps[-1] if steps else None
-        except FileNotFoundError:
-            return None
+        steps = list_steps(self.directory)
+        return steps[-1] if steps else None
 
     def restore(self, tree_like, shardings=None, step=None):
         return load_checkpoint(self.directory, tree_like, step, shardings)
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_"))
-        for s in steps[:-self.keep_n]:
+        for s in list_steps(self.directory)[:-self.keep_n]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
                           ignore_errors=True)

@@ -184,6 +184,49 @@ class DegradeLadder:
         self.cooldown = self.backoff
         self.backoff = min(self.backoff * 2, self.cfg.backoff_max)
 
+    def export_state(self) -> dict:
+        """The ladder's full host state as JSON-serializable scalars, for
+        the serving snapshot (repro.state). ``_down_since`` rides along so
+        an outage that spans a crash keeps its original start epoch --
+        recovery latency is measured once, from the true onset, and never
+        double-counted across a restore."""
+        return {
+            "stage": self.stage,
+            "epoch": self.epoch,
+            "quarantine_left": self.quarantine_left,
+            "backoff": self.backoff,
+            "cooldown": self.cooldown,
+            "bad_streak": self.bad_streak,
+            "clean_streak": self.clean_streak,
+            "down_since": self._down_since,
+            "quarantines": self.quarantines,
+            "holds": self.holds,
+            "baseline_fallbacks": self.baseline_fallbacks,
+            "cold_replans": self.cold_replans,
+            "recoveries": self.recoveries,
+            "recovery_epochs": list(self.recovery_epochs),
+            "watchdog_fires": self.watchdog_fires,
+        }
+
+    def import_state(self, state: dict) -> None:
+        """Inverse of export_state: overwrite the ladder with a snapshot."""
+        self.stage = str(state["stage"])
+        self.epoch = int(state["epoch"])
+        self.quarantine_left = int(state["quarantine_left"])
+        self.backoff = int(state["backoff"])
+        self.cooldown = int(state["cooldown"])
+        self.bad_streak = int(state["bad_streak"])
+        self.clean_streak = int(state["clean_streak"])
+        ds = state["down_since"]
+        self._down_since = None if ds is None else int(ds)
+        self.quarantines = int(state["quarantines"])
+        self.holds = int(state["holds"])
+        self.baseline_fallbacks = int(state["baseline_fallbacks"])
+        self.cold_replans = int(state["cold_replans"])
+        self.recoveries = int(state["recoveries"])
+        self.recovery_epochs = [int(x) for x in state["recovery_epochs"]]
+        self.watchdog_fires = int(state["watchdog_fires"])
+
     def metrics(self) -> dict:
         mean_rec = (sum(self.recovery_epochs) / len(self.recovery_epochs)
                     if self.recovery_epochs else 0.0)

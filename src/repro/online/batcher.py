@@ -330,3 +330,27 @@ class DecodeBatcher:
         logits, self.caches = self._step(self.params, self.caches, token,
                                          active)
         return logits
+
+    def export_caches(self):
+        """Host copies of the slot caches (repro.state serving snapshot):
+        device_get on the caller's thread, so the returned tree is immune
+        to the donated in-place update of the next step()."""
+        return jax.device_get(self.caches)
+
+    def import_caches(self, caches) -> None:
+        """Restore exported slot caches. Avals must match the live caches
+        (same model/capacity/max_len) or the compiled masked step would
+        retrace; a mismatch raises ValueError."""
+        live = jax.tree_util.tree_flatten(self.caches)
+        new = jax.tree_util.tree_flatten(caches)
+        if live[1] != new[1]:
+            raise ValueError("cache treedef mismatch on import")
+        for i, (a, b) in enumerate(zip(new[0], live[0])):
+            if (jnp.shape(a) != jnp.shape(b)
+                    or jnp.result_type(a) != jnp.result_type(b)):
+                raise ValueError(
+                    f"cache leaf {i}: got {jnp.result_type(a)}"
+                    f"{list(jnp.shape(a))}, live caches have "
+                    f"{jnp.result_type(b)}{list(jnp.shape(b))}")
+        self.caches = jax.tree_util.tree_unflatten(
+            new[1], [jnp.asarray(x) for x in new[0]])

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -163,6 +164,11 @@ class OnlineLoop:
         self._key: jax.Array | None = None
         self._fb_jit = None                  # jitted fallback plan builder
         self._plan_template = None           # engine plan avals (eval_shape)
+        # durable serving (repro.state): host epoch clock, the attached
+        # flight recorder, and cached engine PlanState avals by treedef kind
+        self.host_epoch = 0
+        self._recorder = None
+        self._state_avals: dict[str, object] = {}
 
     # -- the compiled epoch program ---------------------------------------
     def _service_and_observation(self, env, plan: SplitPlan,
@@ -294,9 +300,22 @@ class OnlineLoop:
     def set_fault_rates(self, cfg: FaultConfig) -> None:
         """Swap the fault mix mid-episode. The rates are operands of the
         compiled epoch program (same avals for every config), so this never
-        retraces -- the chaos benchmark's outage-rate sweep is this call."""
+        retraces -- the chaos benchmark's outage-rate sweep is this call.
+        With a flight recorder attached, the swap is journaled (it is host
+        input the deterministic replay cannot re-derive)."""
         self.fault_cfg = cfg
         self._rates = cfg.rates()
+        if self._recorder is not None:
+            self._recorder.record_rates(self.host_epoch,
+                                        dataclasses.asdict(cfg))
+
+    def attach_recorder(self, recorder) -> None:
+        """Attach a repro.state.FlightRecorder: every epoch's host trace
+        (the packed plan/health word, the QoS trigger, the ladder stage)
+        and every fault-rate swap are journaled for deterministic replay.
+        Recording syncs s* per epoch (one extra scalar beyond the loop's
+        decision reads); pass None to detach."""
+        self._recorder = recorder
 
     def _fallback(self, env) -> SplitPlan:
         """The ladder's rung-3 plan, cast to engine-plan avals (so serving
@@ -323,6 +342,8 @@ class OnlineLoop:
         appears. Hardened loops also warm the fallback-plan program here,
         so a mid-episode ladder escalation traces nothing."""
         k_sc, k_st, self._key = jax.random.split(key, 3)
+        self.host_epoch = 0
+        self._state_avals.clear()
         self._sc = self.scenario.init(k_sc)
         self._st = self.stream.init(k_st)
         self._bt = self.batcher.init()
@@ -339,6 +360,7 @@ class OnlineLoop:
             plan_fn = self.engine.program("plan", env0)
             shapes = jax.eval_shape(
                 plan_fn, *self.engine.program_args("plan", env0))
+            self._state_avals["cold"] = shapes
             self._plan_template = shapes.plan
         self.server.observe(env0)          # epoch 0 is always scheduled
         if self.ladder is not None:
@@ -364,6 +386,116 @@ class OnlineLoop:
         trace-only audits (analysis.fault_audit)."""
         return (self._key, self._plan, self._rates, self._sc, self._st,
                 self._bt, self._qs, self._tel, self._fs)
+
+    # -- durable serving (repro.state hooks) -------------------------------
+    def _plan_state_avals(self, kind: str):
+        """Engine PlanState avals by treedef kind: "cold"/"none" states come
+        from the plan program (warm_rho is None there), "warm" from replan.
+        jax.eval_shape only -- no solver executes. Cached per episode."""
+        want = "cold" if kind == "none" else kind
+        if want not in self._state_avals:
+            env0 = self.scenario.env(self._sc)
+            if "cold" not in self._state_avals:
+                self._state_avals["cold"] = jax.eval_shape(
+                    self.engine.program("plan", env0),
+                    *self.engine.program_args("plan", env0))
+            if want == "warm":
+                self._state_avals["warm"] = jax.eval_shape(
+                    self.engine.program("replan", env0),
+                    *self.engine.program_args(
+                        "replan", env0, prev=self._state_avals["cold"]))
+        return self._state_avals[want]
+
+    def serving_state(self) -> tuple[dict, dict]:
+        """The loop's complete episode state as ``(device_tree, host)``.
+
+        ``device_tree`` holds every device-resident pytree the epoch program
+        and the planner thread through epochs (PRNG base key, served plan,
+        fault rates, scenario/stream/batch/QoS/telemetry/fault state, the
+        server's PlanState + GD-iteration accumulator). ``host`` holds the
+        JSON-scalar control-plane state (epoch clock, server counters,
+        ladder state machine). Restoring both via load_serving_state makes
+        the next epoch bit-identical to the uninterrupted run: all per-epoch
+        randomness is fold_in(base_key, epoch), and every host decision is a
+        deterministic function of the restored counters.
+
+        A rejected-first-plan server (state None) snapshots a zero-filled
+        cold-shaped PlanState with ``plan_state_kind == "none"`` so the
+        device treedef stays constant across snapshot kinds."""
+        if self._st is None:
+            raise RuntimeError("serving_state() before reset()")
+        if self.server.state is not None:
+            ps = self.server.state
+            kind = "warm" if ps.warm_rho is not None else "cold"
+        else:
+            kind = "none"
+            ps = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype),
+                              self._plan_state_avals("none"))
+        device = {
+            "key": self._key, "plan": self._plan, "rates": self._rates,
+            "sc": self._sc, "st": self._st, "bt": self._bt, "qs": self._qs,
+            "tel": self._tel, "fs": self._fs,
+            "server_state": ps, "iters_acc": self.server._iters_acc,
+        }
+        host = {
+            "host_epoch": self.host_epoch,
+            "plan_state_kind": kind,
+            "server": self.server.export_host(),
+            "ladder": (self.ladder.export_state()
+                       if self.ladder is not None else None),
+        }
+        return device, host
+
+    def state_template(self, kind: str):
+        """Avals (ShapeDtypeStructs) of serving_state()'s device tree for a
+        snapshot whose PlanState treedef kind was ``kind`` -- the
+        restore-side validation target. Built from the live episode state
+        plus eval_shape of the engine programs, so any stored leaf that
+        fails to match these avals is exactly a leaf that would have
+        retraced the (already compiled) epoch or planner programs."""
+        device, _ = self.serving_state()
+        device["server_state"] = self._plan_state_avals(kind)
+        return jax.tree.map(
+            lambda x: (x if isinstance(x, jax.ShapeDtypeStruct)
+                       else jax.ShapeDtypeStruct(jnp.shape(x),
+                                                 jnp.result_type(x))),
+            device)
+
+    def load_serving_state(self, device: dict, host: dict) -> None:
+        """Overwrite the episode with a restored serving_state(). The loop
+        must be reset() first (the compiled programs, templates and warmed
+        fallback come from reset; the snapshot supplies only state)."""
+        if self._st is None:
+            raise RuntimeError("load_serving_state() before reset()")
+        self._key = device["key"]
+        self._plan = device["plan"]
+        self._rates = device["rates"]
+        self._sc = device["sc"]
+        self._st = device["st"]
+        self._bt = device["bt"]
+        self._qs = device["qs"]
+        self._tel = device["tel"]
+        self._fs = device["fs"]
+        self.host_epoch = int(host["host_epoch"])
+        self.server.import_host(host["server"], device["iters_acc"])
+        self.server.state = (None if host["plan_state_kind"] == "none"
+                             else device["server_state"])
+        if self.ladder is not None and host["ladder"] is not None:
+            self.ladder.import_state(host["ladder"])
+
+    def config_fingerprint(self) -> str:
+        """Hash of everything that shapes the compiled programs and the host
+        policy. A snapshot taken under one configuration must not restore
+        into a loop built under another (the restored leaves would hit
+        different programs); fault *rates* are excluded -- they are operands
+        and travel inside the snapshot."""
+        parts = repr((self.scenario.cfg, self.stream_cfg, self.service_cfg,
+                      self.qos_cfg, self.engine.cfg, self.engine.method,
+                      self.engine.rounding, self.engine.warm_rho_min,
+                      self.engine.warm_moment_decay,
+                      self.ladder.cfg if self.ladder is not None else None,
+                      self.feedback))
+        return hashlib.sha256(parts.encode()).hexdigest()[:16]
 
     def _step_epoch_inner(self) -> tuple[EpochOut, bool]:
         (self._sc, self._st, self._bt, self._qs, self._tel, self._fs,
@@ -398,13 +530,23 @@ class OnlineLoop:
         whether a QoS trigger forced an off-schedule replan (the host-side
         decision read). Hardened loops run under the epoch watchdog: an
         overrun keeps its result (state stays consistent) but escalates
-        the ladder."""
+        the ladder. Advances the host epoch clock and, with a flight
+        recorder attached, journals the epoch's host trace."""
         if self._watchdog is None:
-            return self._step_epoch_inner()
-        result, fired = self._watchdog.guard(self._step_epoch_inner)
-        if fired and self.ladder is not None:
-            self.ladder.on_timeout()
-        return result
+            out, trigger = self._step_epoch_inner()
+        else:
+            (out, trigger), fired = self._watchdog.guard(
+                self._step_epoch_inner)
+            if fired and self.ladder is not None:
+                self.ladder.on_timeout()
+        self.host_epoch += 1
+        if self._recorder is not None:
+            self._recorder.record_epoch(
+                self.host_epoch, s=int(self._plan.s), health=int(out.health),
+                trigger=bool(trigger),
+                stage=self.ladder.stage if self.ladder is not None
+                else "normal")
+        return out, trigger
 
     def run(self, key: jax.Array, n_epochs: int,
             record: bool = False) -> dict:
@@ -413,35 +555,44 @@ class OnlineLoop:
         steady-state no-transfer property is audited with record=False).
         Returns summary metrics (and, when recording, the trajectory)."""
         self.reset(key)
-        hist: dict[str, list] = {k: [] for k in
-                                 ("s", "p50", "p95", "miss_rate", "occupancy",
-                                  "backlog", "completed", "congestion",
-                                  "trigger", "health", "faulted",
-                                  "plan_finite", "stage")}
+        hist = self.history_init()
         for _ in range(n_epochs):
             out, trigger = self.step_epoch()
             if record:
-                hist["s"].append(int(self._plan.s))
-                hist["p50"].append(float(out.report.p50))
-                hist["p95"].append(float(out.report.p95))
-                hist["miss_rate"].append(float(out.report.miss_rate))
-                hist["occupancy"].append(int(out.occupancy))
-                hist["backlog"].append(int(out.backlog))
-                hist["completed"].append(int(out.completed))
-                hist["congestion"].append(float(out.congestion))
-                hist["trigger"].append(bool(trigger))
-                hist["health"].append(int(out.health))
-                hist["faulted"].append(int(out.faulted))
-                # Was the plan on the air this epoch finite? The chaos
-                # benchmark's "no NaN plans served" gate reads this.
-                hist["plan_finite"].append(
-                    bool(jnp.isfinite(self._plan.utility)))
-                hist["stage"].append(self.ladder.stage if self.ladder
-                                     else "normal")
+                self.record_history(hist, out, trigger)
         m = self.metrics()
         if record:
             m["history"] = hist
         return m
+
+    def history_init(self) -> dict[str, list]:
+        """An empty per-epoch trajectory dict (run()'s record=True columns).
+        The crash supervisor shares these helpers so a recovered episode's
+        history is column-compatible with an uninterrupted run's."""
+        return {k: [] for k in
+                ("s", "p50", "p95", "miss_rate", "occupancy", "backlog",
+                 "completed", "congestion", "trigger", "health", "faulted",
+                 "plan_finite", "stage")}
+
+    def record_history(self, hist: dict[str, list], out: EpochOut,
+                       trigger: bool) -> None:
+        """Append one epoch's host-visible scalars to ``hist``."""
+        hist["s"].append(int(self._plan.s))
+        hist["p50"].append(float(out.report.p50))
+        hist["p95"].append(float(out.report.p95))
+        hist["miss_rate"].append(float(out.report.miss_rate))
+        hist["occupancy"].append(int(out.occupancy))
+        hist["backlog"].append(int(out.backlog))
+        hist["completed"].append(int(out.completed))
+        hist["congestion"].append(float(out.congestion))
+        hist["trigger"].append(bool(trigger))
+        hist["health"].append(int(out.health))
+        hist["faulted"].append(int(out.faulted))
+        # Was the plan on the air this epoch finite? The chaos
+        # benchmark's "no NaN plans served" gate reads this.
+        hist["plan_finite"].append(bool(jnp.isfinite(self._plan.utility)))
+        hist["stage"].append(self.ladder.stage if self.ladder
+                             else "normal")
 
     def metrics(self) -> dict:
         """End-of-episode summary. Syncs the episode counters once."""

@@ -252,6 +252,45 @@ class OnlineSplitServer:
             "total_iters": self.total_iters,
         }
 
+    def export_host(self) -> dict:
+        """The server's host-side control-plane state as JSON scalars, for
+        the serving snapshot (repro.state). The device-resident pieces
+        (PlanState and the GD-iteration accumulator) travel in the
+        snapshot's device tree, not here."""
+        return {
+            "epoch": self.epoch,
+            "recuts": self.recuts,
+            "cold_resets": self.cold_resets,
+            "replans": self.replans,
+            "forced_replans": self.forced_replans,
+            "bad_plans": self.bad_plans,
+            "split_layer": self.split_layer,
+            "last_plan_ok": self.last_plan_ok,
+            "last_replanned": self.last_replanned,
+        }
+
+    def import_host(self, state: dict, iters_acc) -> None:
+        """Inverse of export_host. ``iters_acc`` is the restored device
+        scalar. When a served model is attached, the split programs are
+        re-cut at the restored split layer (the compiled split programs
+        themselves are not persisted -- they are pure functions of
+        (model, params, s))."""
+        self.epoch = int(state["epoch"])
+        self.recuts = int(state["recuts"])
+        self.cold_resets = int(state["cold_resets"])
+        self.replans = int(state["replans"])
+        self.forced_replans = int(state["forced_replans"])
+        self.bad_plans = int(state["bad_plans"])
+        sl = state["split_layer"]
+        self.split_layer = None if sl is None else int(sl)
+        ok = state["last_plan_ok"]
+        self.last_plan_ok = None if ok is None else bool(ok)
+        self.last_replanned = bool(state["last_replanned"])
+        self._iters_acc = iters_acc
+        if self.model is not None and self.split_layer is not None:
+            self.programs = make_split_serve(self.model, self.params,
+                                             self.split_layer)
+
     def reset_warm(self) -> None:
         """Drop the warm-start payload: the next replan goes cold. The
         degradation ladder calls this before a degraded-stage retry --

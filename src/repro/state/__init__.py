@@ -1,0 +1,22 @@
+"""Durable serving: versioned snapshots of the online loop's full state,
+a deterministic-replay flight recorder, and a crash supervisor that
+resumes bit-exactly from the newest valid snapshot. See
+analysis.recovery_audit for the machine-checked guarantees."""
+from repro.checkpoint.manager import SnapshotIntegrityError  # noqa: F401
+from repro.state.journal import (  # noqa: F401
+    FlightRecorder,
+    effective_trajectory,
+    pack_word,
+    read_journal,
+    replay,
+    unpack_word,
+)
+from repro.state.snapshot import (  # noqa: F401
+    SNAPSHOT_VERSION,
+    SnapshotConfig,
+    SnapshotStore,
+    list_snapshots,
+    load_snapshot,
+    save_snapshot,
+)
+from repro.state.supervisor import CrashSupervisor, SimulatedCrash  # noqa: F401

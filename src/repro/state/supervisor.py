@@ -1,0 +1,151 @@
+"""Crash supervisor: restart a killed serving loop from durable state.
+
+The supervisor owns the epoch loop that ``OnlineLoop.run`` would otherwise
+drive, adding the durability hooks around each step:
+
+  * cut snapshots on the store's cadence (``SnapshotStore.maybe_save``)
+  * journal every epoch/snapshot/restore into the flight recorder
+  * catch a crash (any exception out of the epoch -- a raised-mid-epoch
+    fault, or the test/benchmark chaos hook's ``SimulatedCrash``) and
+    rebuild: fresh loop from the factory, reset with the episode key,
+    then restore, escalating exactly as the ISSUE's ladder names it --
+
+      newest snapshot -> (checksum fail) -> previous snapshot -> ...
+      -> (none valid) -> PR-9 ladder cold start from epoch 0
+
+Because restore is bit-exact (repro.state.snapshot) and all host decisions
+are deterministic functions of restored counters, the epochs re-executed
+after a resume equal the uninterrupted run's leaf-for-leaf -- recovery
+costs wall-clock (``recovery_epochs`` counts the re-executed epochs), not
+correctness.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.state.journal import FlightRecorder
+from repro.state.snapshot import SnapshotStore
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by chaos hooks to kill the loop mid-flight in tests and the
+    recovery benchmark -- stands in for a process kill."""
+
+
+class CrashSupervisor:
+    """Drives an OnlineLoop to ``n_epochs`` across crashes.
+
+    factory    () -> OnlineLoop, the *same* configuration every call (the
+               snapshot fingerprint enforces this).
+    store      SnapshotStore for durability; None disables snapshots (the
+               benchmark's no-checkpoint arm: every crash is a cold start).
+    recorder   FlightRecorder journaling the run; optional.
+    max_restarts  crash budget before the supervisor re-raises.
+    """
+
+    def __init__(self, factory: Callable[[], Any],
+                 store: SnapshotStore | None = None,
+                 recorder: FlightRecorder | None = None,
+                 max_restarts: int = 5):
+        self.factory = factory
+        self.store = store
+        self.recorder = recorder
+        self.max_restarts = max_restarts
+        self.loop = None
+        # recovery accounting (surfaced via metrics())
+        self.restarts = 0
+        self.cold_restarts = 0
+        self.corrupt_snapshots = 0
+        self.recovery_epochs = 0       # epochs re-executed after restores
+        self.restored_from: list[int] = []
+
+    def _boot(self, key: jax.Array, seed: int | None):
+        loop = self.factory()
+        if self.recorder is not None:
+            loop.attach_recorder(self.recorder)
+            if seed is not None:
+                self.recorder.record_start(seed, loop.config_fingerprint())
+        loop.reset(key)
+        return loop
+
+    def _recover(self, key: jax.Array, crash_epoch: int):
+        """Rebuild after a crash: fresh loop, newest valid snapshot, the
+        escalation ladder on integrity failures, cold start at the end."""
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"crash budget exhausted ({self.max_restarts} restarts)")
+        loop = self._boot(key, None)    # reset == the ladder cold start
+        restored = 0
+        if self.store is not None:
+            try:
+                restored, skipped = self.store.restore_newest_valid(loop)
+                self.corrupt_snapshots += len(skipped)
+            except FileNotFoundError:
+                # every listed snapshot was tried and failed validation
+                self.corrupt_snapshots += len(self.store.epochs())
+                self.cold_restarts += 1
+        else:
+            self.cold_restarts += 1
+        self.recovery_epochs += max(crash_epoch - restored, 0)
+        self.restored_from.append(restored)
+        if self.recorder is not None:
+            self.recorder.record_restore(crash_epoch, restored)
+        return loop
+
+    def run(self, key: jax.Array, n_epochs: int, seed: int | None = None,
+            record: bool = False,
+            chaos: Callable[[int], None] | None = None) -> dict:
+        """Run to ``n_epochs`` completed epochs, surviving crashes.
+
+        ``chaos(next_epoch)`` is called before each epoch and may raise to
+        simulate a crash (SimulatedCrash or anything else non-exiting).
+        ``seed`` labels the journal's start record for replay; pass the
+        integer that made ``key``. With record=True the returned metrics
+        carry the run()-compatible per-epoch history -- rewound on restore,
+        so re-executed epochs appear once."""
+        self.loop = loop = self._boot(key, seed)
+        hist = loop.history_init()
+        while loop.host_epoch < n_epochs:
+            try:
+                if chaos is not None:
+                    chaos(loop.host_epoch + 1)
+                out, trigger = loop.step_epoch()
+                if record:
+                    loop.record_history(hist, out, trigger)
+                if self.store is not None:
+                    path = self.store.maybe_save(loop)
+                    if path is not None and self.recorder is not None:
+                        self.recorder.record_snapshot(loop.host_epoch, path)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                crash_epoch = loop.host_epoch
+                if self.store is not None:
+                    # A real kill would also lose the writer thread; join it
+                    # so the restart sees a quiesced directory either way.
+                    try:
+                        self.store.wait()
+                    except Exception:
+                        pass
+                self.loop = loop = self._recover(key, crash_epoch)
+                if record:
+                    for col in hist.values():
+                        del col[loop.host_epoch:]
+        m = loop.metrics()
+        m.update(self.metrics())
+        if record:
+            m["history"] = hist
+        return m
+
+    def metrics(self) -> dict:
+        return {
+            "restarts": self.restarts,
+            "cold_restarts": self.cold_restarts,
+            "corrupt_snapshots": self.corrupt_snapshots,
+            "supervisor_recovery_epochs": self.recovery_epochs,
+            "restored_from": list(self.restored_from),
+            "snapshots_saved": self.store.saves if self.store else 0,
+        }

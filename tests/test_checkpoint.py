@@ -1,0 +1,126 @@
+"""repro.checkpoint hardening (PR 10): atomic rename-aside promotion (no
+crash window in which the only copy is gone), stranded-aside recovery, and
+meta.json/shard validation that raises SnapshotIntegrityError instead of
+silently mis-unflattening."""
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    SnapshotIntegrityError,
+    leaf_crc32,
+    list_steps,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(v=0.0):
+    return {"w": jnp.arange(6.0).reshape(2, 3) + v,
+            "b": jnp.zeros((3,), jnp.float32),
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+class TestAtomicPromotion:
+    def test_overwrite_same_step_keeps_newest(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _tree(0.0))
+        save_checkpoint(d, 1, _tree(5.0))      # exercises rename-aside
+        out, step = load_checkpoint(d, _tree())
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(_tree(5.0)["w"]))
+        assert not any(n.endswith(".aside") for n in os.listdir(d))
+
+    def test_crash_between_renames_is_recovered(self, tmp_path):
+        # Simulate dying after `final -> aside` but before `tmp -> final`:
+        # the only copy lives under the aside name. The next reader must
+        # rename it back rather than reporting no checkpoints.
+        d = str(tmp_path)
+        final = save_checkpoint(d, 2, _tree(1.0))
+        os.rename(final, final + ".aside")
+        assert not os.path.exists(final)
+        out, step = load_checkpoint(d, _tree())    # triggers _recover
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(_tree(1.0)["w"]))
+
+    def test_superseded_aside_is_discarded(self, tmp_path):
+        # Crash after `tmp -> final` but before deleting the aside: the
+        # final is the NEW copy; recovery must drop the stale aside, not
+        # restore it over the new data.
+        d = str(tmp_path)
+        final = save_checkpoint(d, 3, _tree(2.0))
+        shutil.copytree(final, final + ".aside")
+        assert list_steps(d) == [3]
+        assert not os.path.exists(final + ".aside")
+        out, _ = load_checkpoint(d, _tree())
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(_tree(2.0)["w"]))
+
+    def test_partial_names_never_parse_as_steps(self, tmp_path):
+        d = str(tmp_path)
+        save_checkpoint(d, 1, _tree())
+        os.makedirs(os.path.join(d, "tmp.9.0"))       # stranded tmp dir
+        (tmp_path / "step_12").mkdir()                # not 8 digits
+        (tmp_path / "step_00000002x").mkdir()         # trailing junk
+        assert list_steps(d) == [1]
+
+
+class TestValidation:
+    def test_structure_mismatch(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        with pytest.raises(SnapshotIntegrityError, match="leaves|treedef"):
+            load_checkpoint(str(tmp_path), {"w": jnp.zeros((2, 3))})
+
+    def test_dtype_mismatch(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        bad = _tree()
+        bad["b"] = jnp.zeros((3,), jnp.int32)
+        with pytest.raises(SnapshotIntegrityError, match="leaf"):
+            load_checkpoint(str(tmp_path), bad)
+
+    def test_shape_mismatch(self, tmp_path):
+        save_checkpoint(str(tmp_path), 1, _tree())
+        bad = _tree()
+        bad["w"] = jnp.zeros((3, 2))
+        with pytest.raises(SnapshotIntegrityError, match="leaf"):
+            load_checkpoint(str(tmp_path), bad)
+
+    def test_truncated_shard(self, tmp_path):
+        final = save_checkpoint(str(tmp_path), 1, _tree())
+        shard = os.path.join(final, "shard_0.npz")
+        with open(shard, "rb") as f:
+            data = f.read()
+        with open(shard, "wb") as f:
+            f.write(data[: len(data) // 2])
+        with pytest.raises(SnapshotIntegrityError):
+            load_checkpoint(str(tmp_path), _tree())
+
+    def test_meta_crc_mismatch(self, tmp_path):
+        final = save_checkpoint(str(tmp_path), 1, _tree())
+        mpath = os.path.join(final, "meta.json")
+        with open(mpath) as f:
+            meta = json.load(f)
+        meta["crc32s"][0] ^= 1
+        with open(mpath, "w") as f:
+            json.dump(meta, f)
+        with pytest.raises(SnapshotIntegrityError, match="CRC"):
+            load_checkpoint(str(tmp_path), _tree())
+
+    def test_missing_meta(self, tmp_path):
+        final = save_checkpoint(str(tmp_path), 1, _tree())
+        os.remove(os.path.join(final, "meta.json"))
+        with pytest.raises(SnapshotIntegrityError, match="meta.json"):
+            load_checkpoint(str(tmp_path), _tree())
+
+    def test_leaf_crc_is_content_only(self):
+        a = np.arange(6, dtype=np.float32).reshape(2, 3)
+        assert leaf_crc32(a) == leaf_crc32(np.asfortranarray(a))
+        b = a.copy()
+        b[0, 0] += 1
+        assert leaf_crc32(a) != leaf_crc32(b)

@@ -1,0 +1,327 @@
+"""repro.state: versioned serving snapshots, bit-exact crash recovery, the
+flight-recorder journal, and the crash supervisor's escalation ladder
+(newest snapshot -> older snapshot -> PR-9 cold start)."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.analysis.recovery_audit import _diff_leaves
+from repro.core import profiles
+from repro.core.types import GdConfig
+from repro.faults import FaultConfig, LadderConfig
+from repro.models import Model
+from repro.online import DecodeBatcher, OnlineLoop, ServiceConfig, StreamConfig
+from repro.planning import PlannerEngine, compile_log
+from repro.scenarios import Scenario, ScenarioConfig
+from repro.state import (
+    CrashSupervisor,
+    FlightRecorder,
+    SimulatedCrash,
+    SnapshotConfig,
+    SnapshotIntegrityError,
+    SnapshotStore,
+    effective_trajectory,
+    list_snapshots,
+    load_snapshot,
+    pack_word,
+    read_journal,
+    replay,
+    unpack_word,
+)
+CFG = GdConfig(step_size=3e-2, eps=1e-4, max_iters=30, optimizer="adam")
+SCEN = ScenarioConfig(n_users=6, n_aps=2, n_sub=3, fading_rho=0.95)
+STREAM = StreamConfig(arrival_rate_hz=20.0, epoch_dt_s=0.02, deadline_s=0.2)
+SERVICE = ServiceConfig(edge_capacity=4, queue_depth=8, load_gain=4.0,
+                        replan_every=3, max_work_epochs=200)
+CHAOS = FaultConfig(link_outage_rate=0.2, fade_depth=1e-6,
+                    ap_outage_rate=0.05, telemetry_drop_rate=0.1,
+                    telemetry_spike_rate=0.05, service_spike_rate=0.02)
+T, CADENCE, CRASH_AT = 18, 6, 14
+SEED = 3
+KEY = jax.random.PRNGKey(SEED)
+
+
+def make_loop() -> OnlineLoop:
+    eng = PlannerEngine(profiles.nin(), cfg=CFG)
+    return OnlineLoop(Scenario(SCEN), eng, STREAM, SERVICE, faults=CHAOS,
+                      degrade=LadderConfig(quarantine_epochs=8,
+                                           baseline_after=2))
+
+
+def _crash_once(at: int):
+    armed = [True]
+
+    def chaos(next_epoch: int) -> None:
+        if next_epoch == at and armed[0]:
+            armed[0] = False
+            raise SimulatedCrash(f"injected kill before epoch {at}")
+
+    return chaos
+
+
+@pytest.fixture(scope="module")
+def uninterrupted():
+    """The reference: T epochs with no crash, same key as every other arm."""
+    loop = make_loop()
+    loop.reset(KEY)
+    for _ in range(T):
+        loop.step_epoch()
+    dev, host = loop.serving_state()
+    return {"dev": jax.device_get(dev), "host": host,
+            "cache": loop.engine.cache_size()}
+
+
+@pytest.fixture(scope="module")
+def snapped(tmp_path_factory):
+    """A loop stepped to 2*CADENCE with a sync SnapshotStore on cadence:
+    snapshots at CADENCE and 2*CADENCE, plus the ladder state at the cut."""
+    td = str(tmp_path_factory.mktemp("snapped"))
+    store = SnapshotStore(td, SnapshotConfig(every=CADENCE, keep_n=3,
+                                             asynchronous=False))
+    loop = make_loop()
+    loop.reset(KEY)
+    saved = []
+    for _ in range(2 * CADENCE):
+        loop.step_epoch()
+        path = store.maybe_save(loop)
+        if path is not None:
+            saved.append(loop.host_epoch)
+    assert saved == [CADENCE, 2 * CADENCE]
+    return {"store": td, "saves": store.saves,
+            "ladder_at_cut": loop.ladder.export_state()}
+
+
+@pytest.fixture(scope="module")
+def resumed(snapped):
+    """Restore the 2*CADENCE snapshot into a fresh loop (a process restart:
+    new engine, nothing warm) and run it to T, then past T under a compile
+    log -- the data for the bit-exact and retrace-free assertions."""
+    fresh = make_loop()
+    fresh.reset(KEY)
+    load_snapshot(snapped["store"], fresh, 2 * CADENCE)
+    ladder_at_restore = fresh.ladder.export_state()
+    for _ in range(T - 2 * CADENCE):
+        fresh.step_epoch()
+    dev, host = fresh.serving_state()
+    dev = jax.device_get(dev)          # later epochs donate these buffers
+    with compile_log() as log:
+        for _ in range(CADENCE):
+            fresh.step_epoch()
+        fresh.serving_state()          # the snapshot-capture path too
+    return {"dev": dev, "host": host,
+            "ladder_at_restore": ladder_at_restore,
+            "log": list(log), "cache": fresh.engine.cache_size()}
+
+
+class TestSnapshotRoundtrip:
+    def test_resume_is_bit_exact(self, resumed, uninterrupted):
+        assert _diff_leaves(uninterrupted["dev"], resumed["dev"]) == []
+        assert json.dumps(resumed["host"], sort_keys=True) == \
+            json.dumps(uninterrupted["host"], sort_keys=True)
+
+    def test_resume_is_retrace_free(self, resumed, uninterrupted):
+        # Steady state after a restore mints zero compiles and no new
+        # engine cache entries: restored leaves hit the live programs'
+        # exact avals.
+        assert resumed["log"] == []
+        assert resumed["cache"] <= uninterrupted["cache"]
+
+    def test_ladder_counters_survive_restore(self, resumed, snapped,
+                                             uninterrupted):
+        # Satellite: the degradation ladder's counters ride the snapshot
+        # verbatim, and recovery latency is not double-counted across the
+        # restore (the down-since watermark is preserved, so a recovery
+        # spanning the crash contributes its true epoch count once).
+        assert resumed["ladder_at_restore"] == snapped["ladder_at_cut"]
+        assert resumed["ladder_at_restore"]["epoch"] == 2 * CADENCE
+        assert resumed["host"]["ladder"] == uninterrupted["host"]["ladder"]
+
+    def test_fingerprint_mismatch_refuses_restore(self, snapped):
+        other_stream = StreamConfig(arrival_rate_hz=25.0, epoch_dt_s=0.02,
+                                    deadline_s=0.2)
+        eng = PlannerEngine(profiles.nin(), cfg=CFG)
+        other = OnlineLoop(Scenario(SCEN), eng, other_stream, SERVICE,
+                           faults=CHAOS, degrade=LadderConfig())
+        with pytest.raises(SnapshotIntegrityError, match="fingerprint"):
+            load_snapshot(snapped["store"], other, 2 * CADENCE)
+
+    def test_store_cadence_and_listing(self, snapped):
+        assert list_snapshots(snapped["store"]) == [CADENCE, 2 * CADENCE]
+        assert snapped["saves"] == 2
+
+
+@pytest.fixture(scope="module")
+def crashed(tmp_path_factory):
+    """A supervised, journaled run killed before epoch CRASH_AT and resumed
+    from the newest snapshot."""
+    td = str(tmp_path_factory.mktemp("crashed"))
+    journal = os.path.join(td, "flight.jsonl")
+    rec = FlightRecorder(journal)
+    store = SnapshotStore(os.path.join(td, "snaps"),
+                          SnapshotConfig(every=CADENCE, keep_n=3,
+                                         asynchronous=False))
+    sup = CrashSupervisor(make_loop, store=store, recorder=rec)
+    m = sup.run(KEY, T, seed=SEED, record=True, chaos=_crash_once(CRASH_AT))
+    rec.close()
+    dev, host = sup.loop.serving_state()
+    return {"sup": sup, "metrics": m, "dev": jax.device_get(dev),
+            "host": host, "journal": journal}
+
+
+class TestCrashSupervisor:
+    def test_resume_matches_uninterrupted(self, crashed, uninterrupted):
+        assert _diff_leaves(uninterrupted["dev"], crashed["dev"]) == []
+        assert json.dumps(crashed["host"], sort_keys=True) == \
+            json.dumps(uninterrupted["host"], sort_keys=True)
+
+    def test_recovery_accounting(self, crashed):
+        sup = crashed["sup"]
+        # killed before epoch 14 (12 + 13 done), resumed from the snapshot
+        # at 12: exactly one re-executed epoch
+        assert sup.restarts == 1
+        assert sup.cold_restarts == 0
+        assert sup.restored_from == [2 * CADENCE]
+        assert sup.recovery_epochs == (CRASH_AT - 1) - 2 * CADENCE
+
+    def test_history_rewound_not_duplicated(self, crashed):
+        hist = crashed["metrics"]["history"]
+        assert all(len(col) == T for col in hist.values())
+
+    @staticmethod
+    def _crash_and_rot(at: int, dst: str, epochs: tuple[int, ...]):
+        """Chaos hook: right before the kill, bit-rot the snapshots at
+        ``epochs`` (corruption between the save and the crash)."""
+        armed = [True]
+
+        def chaos(next_epoch: int) -> None:
+            if next_epoch == at and armed[0]:
+                armed[0] = False
+                for e in epochs:
+                    with open(os.path.join(dst, f"snap_{e:08d}",
+                                           "leaves.npz"), "wb") as f:
+                        f.write(b"not a zip archive")
+                raise SimulatedCrash(f"injected kill before epoch {at}")
+
+        return chaos
+
+    def test_corrupt_newest_escalates_to_previous(self, uninterrupted,
+                                                  tmp_path):
+        dst = str(tmp_path / "snaps")
+        store = SnapshotStore(dst, SnapshotConfig(every=CADENCE, keep_n=3,
+                                                  asynchronous=False))
+        sup = CrashSupervisor(make_loop, store=store)
+        sup.run(KEY, T,
+                chaos=self._crash_and_rot(CRASH_AT, dst, (2 * CADENCE,)))
+        assert sup.restored_from == [CADENCE]
+        assert sup.corrupt_snapshots == 1
+        assert sup.recovery_epochs == (CRASH_AT - 1) - CADENCE
+        dev, host = sup.loop.serving_state()
+        assert _diff_leaves(uninterrupted["dev"], dev) == []
+
+    def test_all_corrupt_falls_to_cold_start(self, uninterrupted, tmp_path):
+        dst = str(tmp_path / "snaps")
+        store = SnapshotStore(dst, SnapshotConfig(every=CADENCE, keep_n=3,
+                                                  asynchronous=False))
+        sup = CrashSupervisor(make_loop, store=store)
+        sup.run(KEY, T, chaos=self._crash_and_rot(
+            CRASH_AT, dst, (CADENCE, 2 * CADENCE)))
+        assert sup.cold_restarts == 1
+        assert sup.corrupt_snapshots == 2
+        assert sup.restored_from == [0]
+        assert sup.recovery_epochs == CRASH_AT - 1
+        # a cold restart replays deterministically from epoch 0: the final
+        # state still equals the uninterrupted run's
+        dev, _ = sup.loop.serving_state()
+        assert _diff_leaves(uninterrupted["dev"], dev) == []
+
+
+class TestJournal:
+    def test_replay_reproduces_trajectory(self, crashed):
+        records, clean = read_journal(crashed["journal"])
+        assert clean and records
+        traj = effective_trajectory(records)
+        assert traj["seed"] == SEED
+        assert sorted(traj["epochs"]) == list(range(1, T + 1))
+        res = replay(records, make_loop)
+        assert res["epochs"] == T
+        assert res["divergence"] is None
+
+    def test_tampered_word_detected_by_replay(self, crashed):
+        records, _ = read_journal(crashed["journal"])
+        tampered = [dict(r) for r in records]
+        victim = next(r for r in tampered
+                      if r["kind"] == "epoch" and r["t"] == 5)
+        victim["word"] ^= 1              # flip the served s* by one
+        res = replay(tampered, make_loop)
+        assert res["divergence"] is not None
+        assert res["divergence"]["t"] == 5
+
+    def test_crc_tamper_truncates_read(self, crashed, tmp_path):
+        path = str(tmp_path / "flight.jsonl")
+        shutil.copy(crashed["journal"], path)
+        with open(path) as f:
+            lines = f.readlines()
+        rec = json.loads(lines[4])
+        rec["word"] = rec.get("word", 0) ^ 1   # crc left stale
+        lines[4] = json.dumps(rec, sort_keys=True) + "\n"
+        with open(path, "w") as f:
+            f.writelines(lines)
+        records, clean = read_journal(path)
+        assert not clean
+        assert len(records) == 4           # everything after the tamper is
+        #                                    untrusted and dropped
+
+    def test_torn_tail_tolerated(self, tmp_path):
+        path = str(tmp_path / "flight.jsonl")
+        rec = FlightRecorder(path)
+        rec.record_start(0, "fp")
+        rec.record_epoch(1, s=4, health=3, trigger=False, stage="normal")
+        rec.close()
+        with open(path, "a") as f:
+            f.write('{"kind": "epoch", "t": 2, ')   # crash mid-write
+        records, clean = read_journal(path)
+        assert not clean
+        assert [r["kind"] for r in records] == ["start", "epoch"]
+
+    def test_restore_rewinds_rate_swaps(self):
+        records = [
+            {"kind": "start", "seed": 0, "fingerprint": "fp"},
+            {"kind": "rates", "t": 3, "rates": {"link_outage_rate": 0.5}},
+            {"kind": "rates", "t": 9, "rates": {"link_outage_rate": 0.9}},
+            {"kind": "restore", "t": 10, "from": 6},
+        ]
+        traj = effective_trajectory(records)
+        # the swap at t=9 was lost to the crash; the one at t=3 survives
+        assert traj["rates"] == [(3, {"link_outage_rate": 0.5})]
+
+    def test_pack_word_roundtrip(self):
+        for health, s in ((0, 0), (3, 41), (7, 65535)):
+            assert unpack_word(pack_word(health, s)) == (health, s)
+
+
+def test_decode_batcher_cache_export_import_roundtrip():
+    """Satellite: slot decode caches export as host copies and import back
+    bit-exactly (the snapshot's batcher leg), with aval validation."""
+    arch = configs.get("qwen1.5-0.5b").reduced()
+    model = Model(arch, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s_len = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s_len), 0,
+                              arch.vocab_size)
+    db = DecodeBatcher(model, params, capacity=b, max_len=s_len + 4)
+    for i in range(b):
+        db.admit(i, toks[i:i + 1])
+    snap = db.export_caches()
+    tok = jnp.zeros((b, 1), jnp.int32)
+    live = np.asarray(db.step(tok, jnp.array([True, True])))
+    db.import_caches(snap)                 # rewind to the exported state
+    again = np.asarray(db.step(tok, jnp.array([True, True])))
+    np.testing.assert_array_equal(live, again)
+    with pytest.raises(ValueError, match="leaf"):
+        db.import_caches(jax.tree_util.tree_map(lambda a: a[..., :1], snap))
